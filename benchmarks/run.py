@@ -1,0 +1,40 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  table1   — Task-1 recall/time grid (paper Table 1)
+  table2   — Task-2 graph build time/recall (paper Table 2)
+  phases   — preprocessing time split (paper §3.2)
+  kernels  — hamming/qdist microbench + TPU roofline model
+  hsort    — Hilbert-sort scaling (2016 algorithm claim)
+
+``python -m benchmarks.run [names...]`` (default: all).
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    names = sys.argv[1:] or ["kernels", "hsort", "phases", "table2", "table1"]
+    t00 = time.time()
+    for name in names:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        if name == "table1":
+            from benchmarks import task1_table1 as m
+        elif name == "table2":
+            from benchmarks import task2_table2 as m
+        elif name == "phases":
+            from benchmarks import build_phases as m
+        elif name == "kernels":
+            from benchmarks import kernel_bench as m
+        elif name == "hsort":
+            from benchmarks import hilbert_sort_bench as m
+        else:
+            raise SystemExit(f"unknown benchmark {name!r}")
+        m.main()
+        print(f"[{name} done in {time.time()-t0:.0f}s]", flush=True)
+    print(f"\nALL BENCHMARKS DONE in {time.time()-t00:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Task-2 as a data-curation tool: near-duplicate detection via the
+approximate k-NN graph (SemDeDup-style).
+
+    PYTHONPATH=src python examples/knn_graph_dedup.py
+
+A corpus with planted near-duplicates is embedded (stub: the low-rank
+generator plays the embedding model); the paper's Algorithm-2 graph is
+built and edges under a distance threshold mark duplicate pairs.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knn_graph
+from repro.core.types import ForestConfig, GraphParams
+from repro.data import ann_datasets
+
+N, D, DUPS = 8000, 384, 400
+
+# corpus + planted near-duplicates (tiny perturbations of random rows)
+base = ann_datasets.lowrank_embeddings(N - DUPS, D, n_clusters=32, seed=0)
+rng = np.random.default_rng(1)
+src = rng.integers(0, len(base), DUPS)
+dup = base[src] + 0.01 * rng.normal(size=(DUPS, D)).astype(np.float32)
+dup /= np.linalg.norm(dup, axis=1, keepdims=True)
+corpus = np.concatenate([base, dup])
+true_pairs = {(int(N - DUPS + i), int(src[i])) for i in range(DUPS)}
+
+params = GraphParams(n_orders=16, k1=48, k2=96, k=15, seed=0)
+t0 = time.time()
+ids, d2 = knn_graph.build_knn_graph(
+    jnp.asarray(corpus), params, forest_cfg=ForestConfig(bits=4, key_bits=448)
+)
+print(f"kNN graph over {N:,} embeddings in {time.time()-t0:.1f}s")
+
+ids_n, d2_n = np.asarray(ids), np.asarray(d2)
+# per-dim noise 0.01 in d=384 -> dup distance d² ≈ 384·1e-4 ≈ 0.04;
+# regular NN distances sit near 0.7 — threshold 0.1 separates cleanly.
+thresh = 0.1
+found = set()
+for i in range(N):
+    for j, dd in zip(ids_n[i], d2_n[i]):
+        if dd < thresh:
+            found.add((max(i, int(j)), min(i, int(j))))
+hits = sum((a, b) in found or (b, a) in found for a, b in true_pairs)
+print(f"planted near-dup pairs recovered: {hits}/{DUPS} "
+      f"({100*hits/DUPS:.1f}%); {len(found)} candidate pairs flagged")
+assert hits / DUPS > 0.9

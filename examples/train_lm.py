@@ -1,0 +1,92 @@
+"""End-to-end LM training driver with checkpoint/restart.
+
+CPU demo (runs in minutes):
+    PYTHONPATH=src python examples/train_lm.py --preset cpu-demo
+100M-param config (for real accelerators; lowers/runs the same code):
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+Demonstrates: config-driven model zoo, microbatch accumulation, AdamW with
+warmup-cosine, async atomic checkpoints, bit-exact resume, loss decreasing
+on the synthetic Zipf+motif stream.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.config import LayerSpec, ModelConfig
+from repro.optim import OptimizerConfig
+from repro.sharding import ShardingRules
+from repro.train.train_loop import (
+    TrainConfig, abstract_train_state, init_train_state, make_train_step,
+)
+
+PRESETS = {
+    # ~3M params: tens of seconds on this CPU container
+    "cpu-demo": ModelConfig(
+        name="demo-3m", family="dense", n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=512, vocab_size=2048,
+        pattern=(LayerSpec(),), act="silu", norm="rmsnorm",
+        tie_embeddings=True, compute_dtype="float32",
+    ),
+    # ~100M params: the brief's end-to-end target for real hardware
+    "100m": ModelConfig(
+        name="demo-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32768,
+        pattern=(LayerSpec(),), act="silu", norm="rmsnorm",
+        tie_embeddings=True,
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="cpu-demo", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    print(f"[{cfg.name}] {cfg.param_count():,} params")
+    rules = ShardingRules()
+    tcfg = TrainConfig(optimizer=OptimizerConfig(
+        lr=3e-3, warmup_steps=10, total_steps=args.steps))
+    pipe = TokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, global_batch=args.batch, seq_len=args.seq))
+    step_fn = jax.jit(make_train_step(cfg, tcfg, rules))
+
+    start = 0
+    if (ls := latest_step(args.ckpt)) is not None:
+        state, _ = restore(args.ckpt, ls, abstract_train_state(cfg, tcfg))
+        start = ls
+        print(f"[resume] from step {ls}")
+    else:
+        state = init_train_state(cfg, tcfg, jax.random.key(0))
+
+    ck = AsyncCheckpointer(args.ckpt)
+    first = last = None
+    for s in range(start, args.steps):
+        t0 = time.time()
+        state, m = step_fn(state, pipe.jax_batch(s))
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if s % 10 == 0:
+            print(f"step {s:4d}  loss {loss:.4f}  ({time.time()-t0:.2f}s)")
+        if (s + 1) % 40 == 0:
+            ck.save(s + 1, state)
+    ck.save(args.steps, state)
+    ck.wait()
+    print(f"[done] loss {first:.3f} -> {last:.3f}; checkpoints in {args.ckpt}")
+    assert last < first, "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Profile one dry-run cell: collective bytes by shape (loop-scaled) +
+biggest arrays.  Usage: python scripts/profile_cell.py <arch> <shape>"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import re
+import sys
+import dataclasses
+from collections import Counter
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import dryrun, shardings as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.optim import OptimizerConfig
+from repro.train.train_loop import TrainConfig, abstract_train_state, make_train_step
+
+arch, shape = sys.argv[1], sys.argv[2]
+cfg = configs.get_config(arch)
+mesh = make_production_mesh()
+rules = dryrun.rules_for(cfg, shape, mesh)
+seq, batch, kind = configs.SHAPES[shape]
+
+with mesh:
+    if kind == "train":
+        n_micro = dryrun.microbatches_for(cfg, seq, batch,
+                                          seq_sharded=(rules.seq is not None))
+        print(f"n_micro={n_micro} seq_shard={rules.seq} fsdp={rules.fsdp}")
+        tcfg = TrainConfig(n_microbatches=n_micro, optimizer=OptimizerConfig(
+            moment_dtype="bfloat16" if cfg.param_count() > 1e11 else "float32"))
+        cfg2 = dataclasses.replace(cfg, remat_policy="full")
+        state = abstract_train_state(cfg2, tcfg)
+        state_sh = shlib.tree_shardings(state, mesh, rules)
+        bspecs = dryrun.input_specs(cfg2, shape)
+        bsh = jax.tree.map(lambda l: NamedSharding(
+            mesh, P(rules.batch, *([None] * (l.ndim - 1)))), bspecs)
+        compiled = jax.jit(make_train_step(cfg2, tcfg, rules),
+                           in_shardings=(state_sh, bsh),
+                           out_shardings=(state_sh, None)
+                           ).lower(state, bspecs).compile()
+    else:
+        params = model.abstract_params(cfg)
+        params_sh = shlib.tree_shardings(params, mesh, rules)
+        ins = dryrun.input_specs(cfg, shape)
+        caches_sh = shlib.tree_shardings(ins["caches"], mesh, rules)
+        tok_sh = NamedSharding(mesh, P(rules.batch, None))
+
+        def serve_step(params, tokens, idx, caches):
+            return model.decode_step(cfg, params, tokens, idx, caches, rules)
+
+        compiled = jax.jit(
+            serve_step,
+            in_shardings=(params_sh, tok_sh, NamedSharding(mesh, P()), caches_sh),
+            out_shardings=(NamedSharding(mesh, P(rules.batch, rules.vocab)),
+                           caches_sh),
+        ).lower(params, ins["tokens"], ins["idx"], ins["caches"]).compile()
+
+txt = compiled.as_text()
+from repro.launch.dryrun import (_COMP_HDR, _WHILE_RE, _CONST_RE,
+                                 _DTYPE_BYTES, _COLL_RE)
+
+comps, entry, cur = {}, None, None
+for line in txt.splitlines():
+    m = _COMP_HDR.match(line.strip())
+    if m:
+        cur = m.group(2)
+        comps[cur] = []
+        if m.group(1):
+            entry = cur
+        continue
+    if cur:
+        comps[cur].append(line)
+
+
+def trip(cond):
+    cs = [int(x) for l in comps.get(cond, ()) for x in _CONST_RE.findall(l)]
+    return max(cs) if cs else 1
+
+
+shape_bytes = Counter()
+
+
+def walk(name, mult, seen):
+    if name in seen:
+        return
+    seen = seen | {name}
+    for line in comps.get(name, ()):
+        cm = _COLL_RE.search(line)
+        if cm:
+            dt, dims, kind_ = cm.group(1), cm.group(2), cm.group(3)
+            b = _DTYPE_BYTES.get(dt, 4)
+            for d in dims.split(","):
+                if d:
+                    b *= int(d)
+            shape_bytes[f"{kind_} {dt}[{dims}]"] += mult * b
+        wm = _WHILE_RE.search(line)
+        if wm:
+            cond = wm.group(1) or wm.group(4)
+            body = wm.group(2) or wm.group(3)
+            walk(body, mult * trip(cond), seen)
+
+
+walk(entry, 1, frozenset())
+print("== collectives by shape (loop-scaled, per device) ==")
+for k, v in shape_bytes.most_common(10):
+    print(f"{v/1e9:10.2f} GB  {k}")
+sizes = Counter()
+for m in re.finditer(r"%[\w\.\-]+ = (\w+)\[([0-9,]+)\]", txt):
+    dt, dims = m.group(1), m.group(2)
+    b = _DTYPE_BYTES.get(dt, 4)
+    for d in dims.split(","):
+        b *= int(d)
+    sizes[f"{dt}[{dims}]"] = max(sizes[f"{dt}[{dims}]"], b)
+print("== biggest arrays ==")
+for shp, b in sizes.most_common(6):
+    print(f"{b/1e9:10.2f} GB  {shp}")

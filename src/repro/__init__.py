@@ -1,0 +1,3 @@
+"""repro: Hilbert-forest indexing + multi-pod JAX training/serving framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,136 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic across meshes.
+
+Design (1000+-node posture):
+  * **Atomic**: write into ``step_<n>.tmp/``, fsync, rename to ``step_<n>/``.
+    A crash mid-write can never corrupt the latest restorable step;
+    ``latest_step`` only sees fully renamed directories.
+  * **Elastic re-mesh**: checkpoints store *logical* arrays (gathered or
+    per-host shards keyed by flat path), never device layouts.  Restore
+    device_puts onto whatever mesh/sharding the new job uses — a job
+    restarted at a different pod count (e.g. after losing a pod) resumes
+    from the same files.
+  * **Async**: ``AsyncCheckpointer`` snapshots to host memory on-thread
+    (device_get) and writes on a background thread, overlapping I/O with
+    the next train steps; ``wait()`` joins before the next save or exit.
+  * **Multi-host**: each host writes ``host<k>.npz`` with its addressable
+    shards; this container is single-host so k=0 carries everything, but
+    the file layout and manifest already carry the host dimension.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+    """Atomic synchronous save. Returns the final directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "host0.npz"), **flat)
+    manifest = {
+        "step": step,
+        "n_hosts": 1,
+        "leaves": {k: [list(v.shape), str(v.dtype)] for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Largest fully-written step (ignores .tmp partials)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    step: int,
+    abstract_tree: Any,
+    shardings: Optional[Any] = None,
+) -> Tuple[Any, Dict]:
+    """Restore onto the CURRENT mesh (elastic re-mesh).
+
+    ``shardings``: optional pytree of NamedSharding matching abstract_tree;
+    when given, leaves are device_put with those shardings (resharding from
+    whatever layout the writing job had).
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "host0.npz"))
+    leaves_paths = jax.tree_util.tree_flatten_with_path(abstract_tree)[0]
+    treedef = jax.tree_util.tree_structure(abstract_tree)
+    shard_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    )
+    out = []
+    for i, (path, leaf) in enumerate(leaves_paths):
+        key = jax.tree_util.keystr(path)
+        arr = data[key]
+        want = getattr(leaf, "dtype", None)
+        if want is not None and arr.dtype != want:
+            arr = arr.astype(want)
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint I/O with training (straggler-free saves)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            self.last_path = save(self.ckpt_dir, step, host_tree, extra)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,9 @@
+"""Hilbert forest core: the paper's contribution as composable JAX modules."""
+
+from repro.core import forest, hilbert, knn_graph, quantize, search, sketch  # noqa: F401
+from repro.core.types import (  # noqa: F401
+    ForestConfig,
+    GraphParams,
+    QuantizerConfig,
+    SearchParams,
+)

@@ -1,0 +1,238 @@
+"""Algorithm 1: approximate k-NN search with a Hilbert forest.
+
+Pipeline (paper §3.1): forest candidates (coarse) → Hamming filter on shared
+sketches (fine) → master-order ±h expansion → asymmetric fp32-vs-4-bit
+distance → top-k.
+
+Implementation notes vs the pseudocode:
+  * The paper first collects ALL n·k1 candidates per query, then filters.
+    At challenge scale that transient alone is ~9 GB; we instead keep a
+    running sketch-filtered top-k2 and merge each tree's k1 candidates into
+    it — identical result (top-k2 of a union is associative), constant
+    memory, and the same trick the paper itself uses for Task 2.
+  * Candidates are tracked by their **master-order position** so stage 2 is
+    a contiguous ±h window and all gathers hit the master-rearranged arrays
+    (the paper's memory-locality trick; on TPU this turns into coalesced
+    gathers over the sorted copies).
+  * Duplicates (same point from several trees / overlapping windows) are
+    deduped during the merge so the final top-k can't contain repeats.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import forest as forest_lib
+from repro.core import quantize, sketch
+from repro.core.types import ForestConfig, QuantizerConfig, SearchParams
+
+__all__ = ["HilbertForestIndex", "build_index", "search"]
+
+_INF = jnp.int32(2**30)
+
+
+class HilbertForestIndex(NamedTuple):
+    forest: forest_lib.HilbertForest
+    quant: quantize.Quantizer
+    codes_master: jax.Array  # (n, d) uint8, master-order layout
+    sketches_master: jax.Array  # (n, Ws) uint32, master-order layout
+    master_order: jax.Array  # (n,) int32: position -> point id
+    master_rank: jax.Array  # (n,) int32: point id -> position
+
+    @property
+    def n_points(self) -> int:
+        return self.master_order.shape[0]
+
+    def memory_report(self) -> dict:
+        """Bytes by component, mirroring the paper's RAM budget table."""
+        d = self.codes_master.shape[1]
+        packed_codes = self.n_points * (-(-d // 8)) * 4  # 4-bit packed
+        sketches = int(np.prod(self.sketches_master.shape)) * 4
+        shared = self.n_points * (-(-d // 32)) * 4  # MSB plane counted once
+        return {
+            "forest_bytes": self.forest.memory_bytes(),
+            "sketch_bytes": sketches,
+            "quantized_bytes": packed_codes,
+            "shared_bit_savings": shared,
+            "combined_stage2_bytes": sketches + packed_codes - shared,
+        }
+
+
+def build_index(
+    points: jax.Array,
+    forest_cfg: ForestConfig,
+    quant_cfg: QuantizerConfig = QuantizerConfig(),
+) -> HilbertForestIndex:
+    """Full Task-1 preprocessing: quantize, sketch, forest, master order."""
+    n, d = points.shape
+    quant = quantize.fit(points, bits=quant_cfg.bits, sample_limit=quant_cfg.sample_limit)
+    codes = quantize.encode(quant, points)
+    sketches = sketch.sketches_from_codes(codes, bits=quant_cfg.bits)
+
+    f = forest_lib.build_forest(points, forest_cfg)
+
+    # Master order: an un-permuted Hilbert sort; vectors/sketches rearranged.
+    master_order, _ = hilbert_master_sort(points, forest_cfg, f.lo, f.hi)
+    master_rank = jnp.zeros((n,), jnp.int32).at[master_order].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    return HilbertForestIndex(
+        forest=f,
+        quant=quant,
+        codes_master=codes[master_order],
+        sketches_master=sketches[master_order],
+        master_order=master_order,
+        master_rank=master_rank,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def hilbert_master_sort(points, cfg: ForestConfig, lo, hi):
+    from repro.core import hilbert
+
+    return hilbert.hilbert_sort(
+        points, bits=cfg.bits, key_bits=cfg.key_bits, lo=lo, hi=hi
+    )
+
+
+def _merge_topk_dedup(best_pos, best_dist, new_pos, new_dist, k: int):
+    """Merge candidate sets keyed by position; dedup; keep k smallest dists."""
+    pos = jnp.concatenate([best_pos, new_pos], axis=1)
+    dist = jnp.concatenate([best_dist, new_dist], axis=1)
+    # Dedup: sort by position; equal-adjacent entries are duplicates (same
+    # position ⇒ same sketch ⇒ same distance), mask all but the first.
+    sort_idx = jnp.argsort(pos, axis=1)
+    pos_s = jnp.take_along_axis(pos, sort_idx, axis=1)
+    dist_s = jnp.take_along_axis(dist, sort_idx, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(pos_s[:, :1], bool), pos_s[:, 1:] == pos_s[:, :-1]], axis=1
+    )
+    dist_s = jnp.where(dup, _INF, dist_s)
+    neg, idx = lax.top_k(-dist_s, k)
+    return jnp.take_along_axis(pos_s, idx, axis=1), -neg
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "key_bits", "leaf_size", "k1", "k2",
+                              "use_kernels")
+)
+def _stage1_tree_merge(
+    queries,
+    qsketches,
+    best_pos,
+    best_dist,
+    order,
+    directory,
+    lo,
+    hi,
+    perm,
+    flip,
+    master_rank,
+    sketches_master,
+    *,
+    bits,
+    key_bits,
+    leaf_size,
+    k1,
+    k2,
+    use_kernels=False,
+):
+    cand_ids = forest_lib.tree_candidates(
+        queries, order, directory, lo, hi, perm, flip,
+        bits=bits, key_bits=key_bits, leaf_size=leaf_size, k1=k1,
+    )  # (Q, k1)
+    mpos = master_rank[cand_ids]  # (Q, k1) master positions
+    csk = sketches_master[mpos]  # (Q, k1, Ws)
+    if use_kernels:
+        from repro.kernels.hamming import hamming_rows
+
+        hd = hamming_rows(qsketches, csk, use_kernel=True)  # (Q, k1)
+    else:
+        hd = sketch.hamming_distance(qsketches[:, None, :], csk)  # (Q, k1)
+    return _merge_topk_dedup(best_pos, best_dist, mpos, hd, k2)
+
+
+@functools.partial(jax.jit, static_argnames=("h", "k"))
+def _stage2_expand_rank(
+    queries, best_pos, codes_master, master_order, quant, *, h, k
+):
+    """±h master-order expansion, dedup, exact ADC distance, final top-k."""
+    n = master_order.shape[0]
+    deltas = jnp.arange(-h, h + 1, dtype=jnp.int32)
+    pos = best_pos[:, :, None] + deltas[None, None, :]
+    pos = jnp.clip(pos, 0, n - 1).reshape(best_pos.shape[0], -1)  # (Q, C)
+    # Invalid slots (pos was -1 sentinel) clip to >=0; mask them via best_pos.
+    valid = (best_pos >= 0)[:, :, None].astype(jnp.int32)
+    valid = jnp.broadcast_to(valid, (best_pos.shape[0], best_pos.shape[1], 2 * h + 1))
+    valid = valid.reshape(best_pos.shape[0], -1)
+    # Dedup positions.
+    sort_idx = jnp.argsort(pos, axis=1)
+    pos_s = jnp.take_along_axis(pos, sort_idx, axis=1)
+    valid_s = jnp.take_along_axis(valid, sort_idx, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(pos_s[:, :1], bool), pos_s[:, 1:] == pos_s[:, :-1]], axis=1
+    )
+    keep = (~dup) & (valid_s == 1)
+
+    codes = codes_master[pos_s]  # (Q, C, d) uint8
+    d2 = quantize.adc_distance(quant, queries, codes)  # (Q, C) fp32
+    d2 = jnp.where(keep, d2, jnp.inf)
+    neg, idx = lax.top_k(-d2, k)
+    final_pos = jnp.take_along_axis(pos_s, idx, axis=1)
+    return master_order[final_pos], -neg
+
+
+def search(
+    index: HilbertForestIndex,
+    queries: jax.Array,
+    params: SearchParams,
+    forest_cfg: ForestConfig,
+    query_chunk: int = 2048,
+    use_kernels: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Batched Algorithm-1 search. Returns (ids (Q, k), sq-distances).
+
+    ``use_kernels=True`` routes the stage-2 Hamming filter through the
+    Pallas ``hamming_rows`` kernel (interpret-mode on CPU; compiled Mosaic
+    on TPU) — same results, asserted in tests/test_kernels_integration."""
+    outs_i, outs_d = [], []
+    qn = queries.shape[0]
+    for s in range(0, qn, query_chunk):
+        q = queries[s : s + query_chunk]
+        pad = 0
+        if q.shape[0] < query_chunk and qn > query_chunk:
+            pad = query_chunk - q.shape[0]
+            q = jnp.pad(q, ((0, pad), (0, 0)))
+        ids, dists = _search_chunk(index, q, params, forest_cfg, use_kernels)
+        if pad:
+            ids, dists = ids[:-pad], dists[:-pad]
+        outs_i.append(ids)
+        outs_d.append(dists)
+    return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
+
+
+def _search_chunk(index, queries, params, forest_cfg, use_kernels=False):
+    f = index.forest
+    qn = queries.shape[0]
+    qsk = sketch.make_sketches(index.quant, queries)
+    best_pos = jnp.full((qn, params.k2), -1, jnp.int32)
+    best_dist = jnp.full((qn, params.k2), _INF, jnp.int32)
+    for t in range(f.n_trees):
+        best_pos, best_dist = _stage1_tree_merge(
+            queries, qsk, best_pos, best_dist,
+            f.orders[t], f.directories[t], f.lo, f.hi, f.perms[t], f.flips[t],
+            index.master_rank, index.sketches_master,
+            bits=forest_cfg.bits, key_bits=forest_cfg.key_bits,
+            leaf_size=forest_cfg.leaf_size, k1=params.k1, k2=params.k2,
+            use_kernels=use_kernels,
+        )
+    return _stage2_expand_rank(
+        queries, best_pos, index.codes_master, index.master_order, index.quant,
+        h=params.h, k=params.k,
+    )

@@ -1,0 +1,59 @@
+"""Binary sketches = the shared MSBs of the 4-bit quantizer (paper §3.1).
+
+For d=384 dims the sketch is exactly 384 bits: bit i is ``x_i >= median_i``,
+which is also the MSB of dimension i's 4-bit code — "one bit is shared with
+the sketch".  Hamming distance = XOR + popcount over packed uint32 lanes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.quantize import Quantizer
+
+__all__ = ["sketch_words", "make_sketches", "sketches_from_codes", "hamming_distance"]
+
+
+def sketch_words(d: int) -> int:
+    return -(-d // 32)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack (n, d) {0,1} into (n, ceil(d/32)) uint32, bit 31 of word 0 first."""
+    n, d = bits.shape
+    w = sketch_words(d)
+    pad = w * 32 - d
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    b = bits.reshape(n, w, 32).astype(jnp.uint32)
+    shifts = (31 - jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(b << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+@jax.jit
+def make_sketches(quant: Quantizer, x: jax.Array) -> jax.Array:
+    """Sketch fp vectors directly: bit i = x_i >= median_i (packed uint32)."""
+    levels = quant.centroids.shape[1]
+    median = quant.boundaries[:, levels // 2 - 1]  # quantile 1/2
+    return pack_bits((x >= median[None, :]).astype(jnp.uint32))
+
+
+@jax.jit
+def sketches_from_codes(codes: jax.Array, bits: int = 4) -> jax.Array:
+    """Sketch = code MSB (the shared bit); exact alias of make_sketches."""
+    msb = (codes >= (1 << (bits - 1))).astype(jnp.uint32)
+    return pack_bits(msb)
+
+
+@jax.jit
+def hamming_distance(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Hamming distance between packed sketches.
+
+    a: (..., W) uint32, b: (..., W) uint32 (broadcastable) -> (...) int32.
+    The Pallas kernel in ``repro.kernels.hamming`` implements the batched
+    (Q, C) contract; this jnp form is the oracle and the CPU path.
+    """
+    x = jnp.bitwise_xor(a, b)
+    return jnp.sum(lax.population_count(x).astype(jnp.int32), axis=-1)

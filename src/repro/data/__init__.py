@@ -1,0 +1,1 @@
+from repro.data import ann_datasets, pipeline  # noqa: F401

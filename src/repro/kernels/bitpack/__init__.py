@@ -1,0 +1,2 @@
+from repro.kernels.bitpack.ops import pack_bits  # noqa: F401
+from repro.kernels.bitpack.ref import pack_bits_ref  # noqa: F401

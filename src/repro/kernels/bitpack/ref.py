@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the bitpack kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pack_bits_ref(bits: jax.Array) -> jax.Array:
+    """(N, K) {0,1} -> (N, K/32) uint32, bit 31 of word 0 = column 0."""
+    n, k = bits.shape
+    w = k // 32
+    b3 = bits.reshape(n, w, 32).astype(jnp.uint32)
+    shifts = (31 - jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(b3 << shifts[None, None, :], axis=-1, dtype=jnp.uint32)

@@ -1,0 +1,2 @@
+from repro.kernels.hamming.ops import hamming_matrix, hamming_rows  # noqa: F401
+from repro.kernels.hamming.ref import hamming_matrix_ref  # noqa: F401

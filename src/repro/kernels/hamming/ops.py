@@ -1,0 +1,77 @@
+"""Jit'd public wrapper: pads to tile multiples, dispatches kernel/oracle.
+
+On this container (CPU) the Pallas kernel runs in interpret mode, which is
+Python-slow; the default path on CPU is therefore the jnp oracle, with
+``use_kernel=True`` (interpret) reserved for correctness tests.  On TPU the
+kernel path is the default.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hamming.kernel import (BC, BQ, hamming_matrix_kernel,
+                                          hamming_rows_kernel)
+from repro.kernels.hamming.ref import hamming_matrix_ref
+
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def hamming_matrix(
+    queries: jax.Array,
+    candidates: jax.Array,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched Hamming distances between packed uint32 sketch matrices.
+
+    Args:
+      queries: (Q, W) uint32.
+      candidates: (C, W) uint32.
+      use_kernel: route through the Pallas kernel (TPU target; interpret on
+        CPU) instead of the jnp oracle.
+
+    Returns:
+      (Q, C) int32.
+    """
+    if not use_kernel:
+        return hamming_matrix_ref(queries, candidates)
+    qn, cn = queries.shape[0], candidates.shape[0]
+    qp = _pad_to(queries, BQ, 0)
+    cp = _pad_to(candidates, BC, 0)
+    out = hamming_matrix_kernel(qp, cp, interpret=interpret)
+    return out[:qn, :cn]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def hamming_rows(
+    queries: jax.Array,
+    candidates: jax.Array,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """(Q, W) vs per-query (Q, K, W) packed sketches -> (Q, K) int32."""
+    if not use_kernel:
+        import jax.numpy as _jnp
+        from jax import lax as _lax
+
+        x = _jnp.bitwise_xor(queries[:, None, :], candidates)
+        return _jnp.sum(_lax.population_count(x).astype(_jnp.int32), axis=-1)
+    qn = queries.shape[0]
+    qp = _pad_to(queries, BQ, 0)
+    cp = _pad_to(candidates, BQ, 0)
+    out = hamming_rows_kernel(qp, cp, interpret=interpret)
+    return out[:qn]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Hamming kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def hamming_matrix_ref(queries: jax.Array, candidates: jax.Array) -> jax.Array:
+    """(Q, W) × (C, W) packed uint32 -> (Q, C) int32 Hamming distances."""
+    x = jnp.bitwise_xor(queries[:, None, :], candidates[None, :, :])
+    return jnp.sum(lax.population_count(x).astype(jnp.int32), axis=-1)

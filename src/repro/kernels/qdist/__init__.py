@@ -1,0 +1,2 @@
+from repro.kernels.qdist.ops import qdist, qdist_from_packed  # noqa: F401
+from repro.kernels.qdist.ref import qdist_packed_ref, qdist_u8_ref  # noqa: F401

@@ -1,0 +1,95 @@
+"""Jit'd public wrappers for the qdist kernels: pad, permute, dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.qdist.kernel import (
+    BC,
+    BQ,
+    packed_dim_order,
+    qdist_packed_kernel,
+    qdist_u8_kernel,
+)
+from repro.kernels.qdist.ref import qdist_packed_ref, qdist_u8_ref
+
+
+def _pad_axis(x: jax.Array, m: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def qdist(
+    queries: jax.Array,
+    codes: jax.Array,
+    centroids: jax.Array,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Asymmetric squared-L2: fp32 queries vs uint8-coded database rows.
+
+    Args:
+      queries: (Q, D) float32.
+      codes: (C, D) uint8 in [0, L).
+      centroids: (D, L) float32 per-dim reconstruction table.
+
+    Returns: (Q, C) float32 squared distances.
+    """
+    if not use_kernel:
+        return qdist_u8_ref(queries, codes, centroids)
+    qn, d = queries.shape
+    cn = codes.shape[0]
+    # Pad D to a lane multiple with zero query/centroid columns (code 0 then
+    # reconstructs to 0.0 — zero contribution to the distance).
+    dp = -(-d // 128) * 128
+    q = jnp.pad(queries, ((0, (-qn) % BQ), (0, dp - d)))
+    c = jnp.pad(codes, ((0, (-cn) % BC), (0, dp - d)))
+    cent = jnp.pad(centroids, ((0, dp - d), (0, 0)))
+    out = qdist_u8_kernel(q, c, cent, levels=centroids.shape[1], interpret=interpret)
+    return out[:qn, :cn]
+
+
+@functools.partial(jax.jit, static_argnames=("d", "use_kernel", "interpret"))
+def qdist_from_packed(
+    queries: jax.Array,
+    packed: jax.Array,
+    centroids: jax.Array,
+    *,
+    d: int,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Packed-nibble codes variant — 0.5 B/dim HBM traffic on TPU.
+
+    Args:
+      queries: (Q, D) float32.
+      packed: (C, ceil(D/8)) uint32, nibble-packed 4-bit codes.
+      centroids: (D, 16) float32.
+      d: original dimensionality.
+    """
+    if not use_kernel:
+        return qdist_packed_ref(queries, packed, centroids, d=d)
+    qn = queries.shape[0]
+    cn, w = packed.shape
+    # Pad packed width so 8·W is a lane multiple; nibble 0 + zero centroid
+    # columns contribute nothing.
+    wp = -(-w // 16) * 16
+    dp = 8 * wp
+    q = jnp.pad(queries, ((0, (-qn) % BQ), (0, dp - d)))
+    p = jnp.pad(packed, ((0, (-cn) % BC), (0, wp - w)))
+    cent = jnp.pad(centroids, ((0, dp - d), (0, 0)))
+    order = jnp.asarray(packed_dim_order(dp))
+    out = qdist_packed_kernel(
+        q[:, order], p, cent[order], levels=centroids.shape[1], interpret=interpret
+    )
+    return out[:qn, :cn]

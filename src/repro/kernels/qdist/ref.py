@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the qdist kernel (both code layouts)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def qdist_u8_ref(
+    queries: jax.Array, codes: jax.Array, centroids: jax.Array
+) -> jax.Array:
+    """(Q, D) f32 × (C, D) uint8 × (D, L) centroids -> (Q, C) f32 squared L2."""
+    recon = jnp.take_along_axis(
+        centroids[None, :, :],
+        codes[:, :, None].astype(jnp.int32),
+        axis=2,
+    )[:, :, 0]  # (C, D)
+    diff = queries[:, None, :] - recon[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("d",))
+def qdist_packed_ref(
+    queries: jax.Array, packed: jax.Array, centroids: jax.Array, *, d: int
+) -> jax.Array:
+    """Packed-nibble variant of the oracle (unpacks, then qdist_u8_ref)."""
+    shifts = jnp.arange(8, dtype=jnp.uint32) * 4
+    codes = ((packed[:, :, None] >> shifts[None, None, :]) & jnp.uint32(0xF))
+    codes = codes.reshape(packed.shape[0], -1)[:, :d].astype(jnp.uint8)
+    return qdist_u8_ref(queries, codes, centroids)

@@ -1,0 +1,517 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This proves the distribution config is coherent without hardware: 512
+placeholder host devices build the production meshes, inputs are
+ShapeDtypeStructs (no allocation), and for every cell we record
+
+  * memory_analysis()  — per-device bytes (fits / doesn't fit),
+  * cost_analysis()    — HLO FLOPs + bytes accessed (roofline numerator),
+  * collective bytes   — parsed from the post-SPMD HLO text per collective
+    kind (the roofline's third term).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi_34b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+(--all spawns one subprocess per cell so an OOM/compile crash loses one
+cell, not the run.)
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import subprocess
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import shardings as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig
+from repro.sharding import ShardingRules, make_rules
+from repro.train.train_loop import TrainConfig, abstract_train_state, make_train_step
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+# `%name = dtype[d0,d1]{layout} all-gather(...)` (also -start async forms).
+_COLL_RE = re.compile(
+    r"=\s*\(?\s*(\w+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+# computation headers may have tuple-typed params with nested parens/brackets
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),.*?(?:condition=%?([\w\.\-]+)).*?(?:body=%?([\w\.\-]+))"
+    r"|while\(.*?\),.*?(?:body=%?([\w\.\-]+)).*?(?:condition=%?([\w\.\-]+))"
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+) = \(?(\w+)\[([0-9,]*)\][^=]*?\s([\w\-]+)\("
+)
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter", "constant",
+             "after-all", "partition-id", "replica-id"}
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+_DOT_RE = re.compile(r"\bdot\(")
+_LCD_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def hlo_metrics(hlo_text: str) -> Dict[str, Any]:
+    """Loop-aware per-device FLOPs / HBM-byte / collective-byte totals.
+
+    XLA's ``compiled.cost_analysis()`` counts every while body ONCE, so a
+    scan over 12 pattern blocks under-reports 12×.  We re-derive the terms
+    from the post-SPMD HLO text: dot FLOPs from output/contracting shapes,
+    shallow bytes (operands+outputs of top-level ops — fusion internals
+    never touch HBM), collective bytes by kind; while bodies are scaled by
+    the trip count read from their condition's comparison constant.
+    """
+    comps: Dict[str, list] = {}
+    shapes: Dict[str, float] = {}       # tensor name -> bytes
+    dims_of: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        comps[cur].append(line)
+        dm = _DEF_RE.match(line)
+        if dm:
+            name, dt, dims = dm.group(1), dm.group(2), dm.group(3)
+            nbytes = _DTYPE_BYTES.get(dt, 4)
+            dl = [int(d) for d in dims.split(",") if d]
+            for d in dl:
+                nbytes *= d
+            shapes[name] = float(nbytes)
+            dims_of[name] = dl
+
+    def local_metrics(name: str) -> Dict[str, float]:
+        out: Dict[str, float] = {"flops": 0.0, "bytes": 0.0}
+        for line in comps.get(name, ()):
+            dm = _DEF_RE.match(line)
+            if dm is not None:
+                refs = _OPND_RE.findall(line)[1:]
+                if dm.group(4) not in _FREE_OPS:
+                    # shallow bytes: output + array operands referenced
+                    out["bytes"] += shapes.get(dm.group(1), 0.0)
+                    out["bytes"] += sum(shapes.get(r, 0.0) for r in refs
+                                        if r in shapes)
+                if _DOT_RE.search(line):
+                    outel = 1.0
+                    for d in dims_of.get(dm.group(1), []):
+                        outel *= d
+                    k = 1.0
+                    lcd = _LCD_RE.search(line)
+                    if lcd and refs:
+                        lhs_dims = dims_of.get(refs[0], [])
+                        for ci in lcd.group(1).split(","):
+                            if ci and int(ci) < len(lhs_dims):
+                                k *= lhs_dims[int(ci)]
+                    out["flops"] += 2.0 * outel * k
+            cm = _COLL_RE.search(line)
+            if cm:
+                dt, dims, kind = cm.group(1), cm.group(2), cm.group(3)
+                nbytes = _DTYPE_BYTES.get(dt, 4)
+                for d in dims.split(","):
+                    if d:
+                        nbytes *= int(d)
+                out[f"coll::{kind}"] = out.get(f"coll::{kind}", 0.0) + float(nbytes)
+                if dt == "f32" and kind == "all-gather":
+                    out["coll::f32_all_gather"] = (
+                        out.get("coll::f32_all_gather", 0.0) + float(nbytes))
+        return out
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(x) for line in comps.get(cond_name, ())
+                  for x in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    def resolve(name: str, seen, for_flops: bool) -> Dict[str, float]:
+        if name in seen:
+            return {}
+        seen = seen | {name}
+        total = dict(local_metrics(name))
+        if not for_flops:
+            total.pop("flops", None)
+        else:
+            total.pop("bytes", None)
+        for line in comps.get(name, ()):
+            subs = []
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond = wm.group(1) or wm.group(4)
+                body = wm.group(2) or wm.group(3)
+                subs.append((resolve(body, seen, for_flops), trip_count(cond)))
+            else:
+                bm = _BRANCH_RE.search(line)
+                if bm:
+                    for b in _OPND_RE.findall(bm.group(1)):
+                        subs.append((resolve(b, seen, for_flops), 1))
+                elif for_flops:
+                    # descend into fusions/calls for dot flops only; fusion
+                    # internals never touch HBM so bytes stay shallow.
+                    for cm2 in _CALL_RE.finditer(line):
+                        subs.append((resolve(cm2.group(1), seen, True), 1))
+            for sub, t in subs:
+                for k, v in sub.items():
+                    total[k] = total.get(k, 0.0) + t * v
+        return total
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {"total": 0.0}}
+    fl = resolve(entry, frozenset(), True)
+    by = resolve(entry, frozenset(), False)
+    colls = {k.split("::")[1]: v for k, v in by.items() if k.startswith("coll::")}
+    colls["total"] = sum(v for k, v in colls.items() if k != "f32_all_gather")
+    return {
+        "flops": fl.get("flops", 0.0),
+        "bytes": by.get("bytes", 0.0),
+        "collectives": colls,
+    }
+
+
+def saved_stack_bytes(cfg: ModelConfig, seq: int, batch: int, n_micro: int,
+                      batch_shards: int = 16, seq_sharded: bool = False) -> float:
+    """Per-device remat-saved layer-input stack for one microbatch.
+
+    Empirical dtype factor 6 B/elem: the bf16 carry stack plus the f32 copy
+    XLA materializes around the backward while-loop (measured; the f32
+    roundtrip is an XLA artifact — JAX emits bf16 saves, see EXPERIMENTS).
+    """
+    tokens_dev = seq * batch / batch_shards / n_micro
+    per_layer = tokens_dev * cfg.d_model * 6
+    if seq_sharded:
+        per_layer /= 16
+    return per_layer * cfg.n_layers
+
+
+def microbatches_for(cfg: ModelConfig, seq: int, batch: int,
+                     seq_sharded: bool = False, batch_shards: int = 16) -> int:
+    """Grad-accumulation count: bound the remat-saved stack at ~4 GB/device.
+
+    n must divide the global batch and leave >= 1 row per batch shard
+    (batch/n >= batch_shards: 16 single-pod, 32 multi-pod).  Fewer
+    microbatches when SP already shards the stack — every extra microbatch
+    re-gathers the FSDP weights.
+    """
+    n = 1
+    while (saved_stack_bytes(cfg, seq, batch, n, batch_shards=batch_shards,
+                             seq_sharded=seq_sharded) > 4e9
+           and n < batch // batch_shards):
+        n += 1
+        while batch % n:
+            n += 1
+    return n
+
+
+def needs_seq_shard(cfg: ModelConfig, seq: int, batch: int) -> bool:
+    """Even at max microbatching the stack exceeds ~6 GB -> sequence-shard
+    the residual stream over 'model' between layers (Ulysses-style SP)."""
+    return saved_stack_bytes(cfg, seq, batch, max(1, batch // 16)) > 6e9
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    seq, batch, kind = configs.SHAPES[shape_name]
+    f32, i32 = jnp.float32, jnp.int32
+    if kind == "train":
+        b: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+            "mask": jax.ShapeDtypeStruct((batch, seq), f32),
+        }
+        if cfg.n_patches:
+            b["patches"] = jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.patch_dim), f32)
+        if cfg.is_encdec:
+            b["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_frames, cfg.d_model), f32)
+        return b
+    if kind == "prefill":
+        b = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+        if cfg.n_patches:
+            b["patches"] = jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.patch_dim), f32)
+        if cfg.is_encdec:
+            b["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_frames, cfg.d_model), f32)
+        return b
+    # decode: one new token against a seq-long cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), i32),
+        "idx": jax.ShapeDtypeStruct((), i32),
+        "caches": model.abstract_decode_caches(cfg, batch, seq),
+    }
+
+
+def rules_for(cfg: ModelConfig, shape_name: str, mesh) -> ShardingRules:
+    overrides: Dict[str, Any] = {}
+    overrides["fsdp"] = "data" if shlib.wants_fsdp(cfg) else None
+    model_size = mesh.shape["model"]
+    if 0 < cfg.n_heads < model_size:
+        # Fewer query heads than the model axis (gemma3: 4 q / 1 kv on 16):
+        # explicit head constraints fight GSPMD propagation (measured
+        # 163 GB/dev collective-permute), and full replication trades it
+        # for 3.5x replicated compute.  Leave attention internals
+        # unconstrained; propagation from the sharded projections keeps a
+        # consistent (heads x head_dim) factorization end-to-end.
+        overrides["attn_unconstrained"] = True
+        overrides["kv_heads"] = None      # cache in_shardings: batch-only
+        overrides["kv_head_dim"] = None
+        # NOTE: rules.heads stays 'model' — the WEIGHT shardings (wq/wo)
+        # are what GSPMD propagates from; only activation constraints are
+        # skipped via attn_unconstrained.
+    if cfg.n_experts and cfg.n_experts % model_size != 0:
+        # mixtral 8e on a 16-way model axis: intra-expert TP instead of EP
+        overrides["experts"] = None
+    if 0 < cfg.n_heads < model_size:
+        pass  # handled above
+    elif 0 < cfg.n_kv_heads < model_size:
+        # kv_heads don't cover the model axis (GQA kv=8 on 16): shard
+        # head_dim instead — contraction over the sharded dim psums, and
+        # the KV cache actually splits instead of padding 2×.
+        overrides["kv_heads"] = None
+        overrides["kv_head_dim"] = "model"
+    seq, batch, kind = configs.SHAPES[shape_name]
+    if kind in ("decode", "prefill") and overrides.get("attn_unconstrained"):
+        # small-head archs at decode: the CACHE still wants dh-sharding
+        # (16x smaller per-device reads); q aligns in attn_decode.
+        overrides["kv_head_dim"] = "model"
+    if kind == "train" and needs_seq_shard(cfg, seq, batch):
+        overrides["seq"] = "model"
+    if kind == "decode" and batch < 16:
+        # long_500k: batch=1 cannot shard; shard the KV-cache sequence
+        # dimension over 'data' instead (ring-attention-style cache reads).
+        overrides["batch"] = None
+        overrides["cache_seq"] = "data"
+    return make_rules(mesh, **overrides)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Build + lower + compile one cell; returns the result record."""
+    cfg = configs.get_config(arch)
+    ok, reason = configs.shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+    seq, batch, kind = configs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, shape_name, mesh)
+    t0 = time.time()
+
+    with mesh:
+        if kind == "train":
+            n_micro = microbatches_for(
+                cfg, seq, batch, seq_sharded=(rules.seq is not None),
+                batch_shards=32 if multi_pod else 16)
+            tcfg = TrainConfig(
+                n_microbatches=n_micro,
+                optimizer=OptimizerConfig(
+                    moment_dtype="bfloat16" if cfg.param_count() > 1e11 else "float32"
+                ),
+            )
+            cfg = dataclasses.replace(cfg, remat_policy="full")
+            state = abstract_train_state(cfg, tcfg)
+            state_sh = shlib.tree_shardings(state, mesh, rules)
+            batch_specs = input_specs(cfg, shape_name)
+            batch_sh = jax.tree.map(
+                lambda l: NamedSharding(mesh, P(rules.batch, *([None] * (l.ndim - 1)))),
+                batch_specs,
+            )
+            param_pspecs = shlib.tree_specs(state["params"], rules)
+            step_fn = make_train_step(cfg, tcfg, rules,
+                                      param_pspecs=param_pspecs)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+            ).lower(state, batch_specs)
+        elif kind == "prefill":
+            params = model.abstract_params(cfg)
+            params_sh = shlib.tree_shardings(params, mesh, rules)
+            ins = input_specs(cfg, shape_name)
+            ins_sh = jax.tree.map(
+                lambda l: NamedSharding(mesh, P(rules.batch, *([None] * (l.ndim - 1)))),
+                ins,
+            )
+
+            def prefill_fn(params, batch):
+                return model.prefill(
+                    cfg, params, batch["tokens"], rules,
+                    patches=batch.get("patches"), frames=batch.get("frames"),
+                )
+
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(params_sh, ins_sh)
+            ).lower(params, ins)
+        else:  # decode
+            params = model.abstract_params(cfg)
+            params_sh = shlib.tree_shardings(params, mesh, rules)
+            ins = input_specs(cfg, shape_name)
+            caches_sh = shlib.tree_shardings(ins["caches"], mesh, rules)
+            tok_sh = NamedSharding(mesh, P(rules.batch, None))
+
+            def serve_step(params, tokens, idx, caches):
+                return model.decode_step(cfg, params, tokens, idx, caches, rules)
+
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(params_sh, tok_sh, NamedSharding(mesh, P()), caches_sh),
+                out_shardings=(
+                    NamedSharding(mesh, P(rules.batch, rules.vocab)),
+                    caches_sh,
+                ),
+            ).lower(params, ins["tokens"], ins["idx"], ins["caches"])
+
+        compiled = lowered.compile()
+
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_rec: Dict[str, Any] = {}
+    for attr in (
+        "temp_size_in_bytes", "argument_size_in_bytes", "output_size_in_bytes",
+        "generated_code_size_in_bytes", "alias_size_in_bytes",
+    ):
+        if hasattr(mem, attr):
+            mem_rec[attr] = int(getattr(mem, attr))
+    metrics = hlo_metrics(compiled.as_text())
+    coll = metrics["collectives"]
+
+    n_chips = 512 if multi_pod else 256
+    # loop-aware HLO metrics (XLA cost_analysis counts while bodies once)
+    flops = metrics["flops"]
+    bytes_acc = metrics["bytes"]
+    seq, batch, kind = configs.SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        model_flops = 6.0 * n_active * seq * batch       # fwd+bwd, all tokens
+    elif kind == "prefill":
+        model_flops = 2.0 * n_active * seq * batch       # fwd only
+    else:
+        model_flops = 2.0 * n_active * batch             # fwd, one new token
+
+    # CPU-backend artifact correction: XLA:CPU float-normalization upcasts
+    # bf16 dots to f32, so weight/activation all-gathers feeding dots are
+    # measured at 2x their TPU size (JAX-level dtypes verified bf16, see
+    # EXPERIMENTS.md §Perf hillclimb B).  Conservative correction: halve
+    # f32 all-gathers only; f32 all-reduces (which include genuinely-f32
+    # gradient reductions) stay uncorrected.
+    f32_ag = coll.get("f32_all_gather", 0.0)
+    coll_corrected = coll.get("total", 0.0) - 0.5 * f32_ag
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_chips": n_chips,
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll,
+        "xla_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": mem_rec,
+        "model_flops_total": model_flops,
+        "compute_term_s": flops / PEAK_FLOPS,
+        "memory_term_s": bytes_acc / HBM_BW,
+        "collective_term_s": coll.get("total", 0.0) / ICI_BW,
+        "collective_term_corrected_s": coll_corrected / ICI_BW,
+    }
+    terms = {"compute_term_s": rec["compute_term_s"],
+             "memory_term_s": rec["memory_term_s"],
+             "collective_term_s": rec["collective_term_corrected_s"]}
+    rec["dominant_term"] = max(terms, key=terms.get)
+    total_device_flops = flops * n_chips
+    rec["useful_flops_ratio"] = (
+        model_flops / total_device_flops if total_device_flops else 0.0
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--timeout", type=int, default=3000)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if not args.all:
+        assert args.arch and args.shape
+        for mp in meshes:
+            rec = lower_cell(args.arch, args.shape, mp)
+            fn = f"{args.out}/{args.arch}.{args.shape}.{rec['mesh']}.json"
+            with open(fn, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(json.dumps(rec, indent=1))
+        return
+
+    # --all: one subprocess per cell (a crash loses one cell, not the run)
+    cells = [
+        (a, s) for a in configs.ARCH_IDS for s in configs.SHAPES
+    ]
+    for a, s in cells:
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            fn = f"{args.out}/{a}.{s}.{mesh_name}.json"
+            if os.path.exists(fn):
+                print(f"[skip cached] {fn}")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", a, "--shape", s, "--mesh", mesh_name, "--out", args.out,
+            ]
+            print(f"[run] {a} × {s} × {mesh_name}", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            if r.returncode != 0:
+                with open(fn, "w") as f:
+                    json.dump({"arch": a, "shape": s, "mesh": mesh_name,
+                               "status": "error",
+                               "stderr": r.stderr[-4000:]}, f, indent=1)
+                print(f"  ERROR (see {fn})", flush=True)
+            else:
+                print(r.stdout.splitlines()[-1][:120] if r.stdout else "  ok",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Production mesh construction (a FUNCTION — importing never touches jax
+device state; jax locks the device count on first backend init)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(model_axis: int = 1):
+    """Whatever this host has (tests / CPU smoke): (n_dev/model, model)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

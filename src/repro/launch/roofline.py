@@ -1,0 +1,77 @@
+"""Roofline aggregation: dry-run JSONs -> EXPERIMENTS.md §Roofline table.
+
+Per (arch × shape), single-pod mesh: the three terms in seconds
+(compute = FLOPs/(chips·197T), memory = bytes/(chips·819G),
+collective = coll_bytes/(chips·50G) — all numerators are per-device, so the
+chip count divides out), the dominant term, MODEL_FLOPS/HLO_FLOPS, and a
+one-line "what would move the dominant term".
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir results/dryrun
+"""
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict
+
+MOVE_HINTS = {
+    "compute_term_s": "reduce redundant/padded compute (remat policy, head padding)",
+    "memory_term_s": "cut activation traffic: fuse, larger microbatch locality, bf16 stores",
+    "collective_term_s": "re-shard to kill resharding collectives / overlap with compute",
+}
+
+
+def load(dir_: str) -> Dict:
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_row(r) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | — | "
+                f"{r['reason'][:58]} |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR | — "
+                f"| see json |")
+    c, m = r["compute_term_s"], r["memory_term_s"]
+    k = r["collective_term_s"]
+    kc = r.get("collective_term_corrected_s", k)
+    dom = r["dominant_term"]
+    ratio = r["useful_flops_ratio"]
+    hint = MOVE_HINTS[dom]
+    return (f"| {r['arch']} | {r['shape']} | {c:.3g} | {m:.3g} | {k:.3g} "
+            f"| {kc:.3g} | {dom.split('_')[0]} | {ratio:.2f} | {hint[:48]} |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("| arch | shape | compute s | memory s | coll s (raw) | coll s "
+          "(bf16-corr) | dominant | useful-FLOP ratio | lever |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    shown = set()
+    for (a, s, m), r in sorted(recs.items()):
+        if m != args.mesh:
+            continue
+        print(fmt_row(r))
+        shown.add((a, s))
+    # multi-pod pass/fail summary
+    n_ok = sum(1 for (a, s, m), r in recs.items()
+               if m == "multi" and r["status"] == "ok")
+    n_skip = sum(1 for (a, s, m), r in recs.items()
+                 if m == "multi" and r["status"] == "skipped")
+    n_err = sum(1 for (a, s, m), r in recs.items()
+                if m == "multi" and r["status"] not in ("ok", "skipped"))
+    print(f"\nmulti-pod (2×16×16): {n_ok} compiled ok, {n_skip} skipped "
+          f"(inapplicable), {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

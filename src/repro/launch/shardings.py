@@ -1,0 +1,122 @@
+"""Per-leaf PartitionSpecs for params / optimizer state / caches / batches.
+
+Leaves are matched by their pytree key path (MaxText-style logical rules,
+resolved here by name because params are plain dicts).  Weight matrices
+shard their contraction-output dim over 'model' (TP) and, when
+``rules.fsdp`` is set, the other dim over 'data' (ZeRO-3); GSPMD pads
+uneven dims (56 heads / 16, 8 kv heads / 16) — the padding waste is visible
+in the roofline and is a §Perf lever.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.sharding import ShardingRules
+
+# last-key -> (spec for base ndim without the stacked-blocks lead dim)
+_MATRIX_RULES = [
+    (re.compile(r"w[qkv]$"), lambda r: (r.fsdp, r.heads)),
+    (re.compile(r"wo$"), lambda r: (r.heads, r.fsdp)),
+    (re.compile(r"in_proj$"), lambda r: (r.fsdp, r.mlp)),
+    (re.compile(r"out_proj$"), lambda r: (r.mlp, r.fsdp)),
+    (re.compile(r"router$"), lambda r: (r.fsdp, None)),
+    (re.compile(r"conv_w$"), lambda r: (None, r.mlp)),
+    (re.compile(r"patch_proj$"), lambda r: (None, None)),
+    (re.compile(r"embed$"), lambda r: (r.vocab, r.fsdp)),
+    (re.compile(r"unembed$"), lambda r: (r.fsdp, r.vocab)),
+]
+
+
+def _leaf_spec(key: str, ndim: int, rules: ShardingRules) -> P:
+    in_blocks = "blocks" in key
+    lead = (None,) if in_blocks else ()
+    base_ndim = ndim - len(lead)
+    m = re.search(r"(\w+)[\]'\.]*$", key)  # dict keys ['wq'] AND dataclass .k
+    last = m.group(1) if m else key
+
+    # --- caches ---
+    if last in ("k", "v"):
+        spec = (rules.batch, rules.cache_seq, rules.kv_heads, rules.kv_head_dim)[:base_ndim]
+        return P(*lead, *spec)
+    if last == "pos":
+        return P(*lead, *([None] * base_ndim))
+    if last == "h" and base_ndim == 4:  # SSM state (B,H,N,P)
+        return P(*lead, rules.batch, rules.heads, None, None)
+    if last == "conv" and base_ndim == 3:  # SSM conv state (B,cw-1,C)
+        return P(*lead, rules.batch, None, rules.mlp)
+
+    # --- weights ---
+    for pat, fn in _MATRIX_RULES:
+        if pat.search(last):
+            spec = fn(rules)
+            if base_ndim == len(spec):
+                return P(*lead, *spec)
+    if last in ("w1", "w3"):
+        if base_ndim == 3:  # MoE (E, D, F): EP when E divides the model
+            # axis, else intra-expert TP (F sharded, experts replicated)
+            ftp = rules.mlp if rules.experts is None else None
+            return P(*lead, rules.experts, rules.fsdp, ftp)
+        return P(*lead, rules.fsdp, rules.mlp)
+    if last == "w2":
+        if base_ndim == 3:  # MoE (E, F, D)
+            ftp = rules.mlp if rules.experts is None else None
+            return P(*lead, rules.experts, ftp, rules.fsdp)
+        return P(*lead, rules.mlp, rules.fsdp)
+    # vectors / scalars (norm scales, biases, a_log, step, ...): replicate
+    return P(*lead, *([None] * base_ndim)) if ndim else P()
+
+
+def tree_specs(tree: Any, rules: ShardingRules) -> Any:
+    """PartitionSpec pytree matching ``tree`` (params/opt state/caches)."""
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    treedef = jax.tree_util.tree_structure(tree)
+    specs = []
+    for path, leaf in paths:
+        key = jax.tree_util.keystr(path)
+        specs.append(_leaf_spec(key, leaf.ndim, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _validate_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axes that don't divide the dim (jit input shardings must divide;
+    with_sharding_constraint tolerates padding but arguments do not)."""
+    new = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            new.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        new.append(entry if shape[i] % size == 0 else None)
+    return P(*new)
+
+
+def tree_shardings(tree: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    treedef = jax.tree_util.tree_structure(tree)
+    out = []
+    for path, leaf in paths:
+        key = jax.tree_util.keystr(path)
+        spec = _validate_spec(_leaf_spec(key, leaf.ndim, rules), leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_specs(batch: Any, rules: ShardingRules) -> Any:
+    """Input batches: shard dim 0 over the batch axes, replicate the rest."""
+    return jax.tree.map(
+        lambda leaf: P(rules.batch, *([None] * (leaf.ndim - 1))), batch
+    )
+
+
+def wants_fsdp(cfg: ModelConfig) -> bool:
+    """ZeRO-3 weight sharding pays off above ~5B params."""
+    return cfg.param_count() > 5e9

@@ -1,0 +1,406 @@
+"""Composable transformer building blocks (pure JAX pytrees, no flax).
+
+Every activation is annotated with logical sharding axes (repro.sharding);
+the same code lowers on 1 CPU device and on the (pod, data, model) production
+mesh.  Attention covers full/local/SWA via a dynamic window scalar (identical
+HLO), GQA via head grouping, and three execution modes: train (full-seq),
+prefill (full-seq + cache emit), decode (single step + ring-buffer cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.config import LayerSpec, ModelConfig
+from repro.sharding import ShardingRules, shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, d: int) -> Params:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    # Moment statistics accumulate in f32, but the normalizing multiply
+    # stays in x.dtype: upcasting x itself makes XLA hoist the bf16->f32
+    # convert of the remat-saved layer-input stack out of the backward
+    # while-loop — a 43 GB materialization at granite-3-8b train_4k.
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+        var = jnp.var(x.astype(jnp.float32), axis=-1, keepdims=True)
+        inv = lax.rsqrt(var + 1e-5).astype(x.dtype)
+        out = (x - mu.astype(x.dtype)) * inv * p["scale"].astype(x.dtype)
+        return out + p["bias"].astype(x.dtype)
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = lax.rsqrt(ms + 1e-6).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh), positions: (B, S) -> rotated x."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)  # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    """Parameter-free position encoding (whisper stub; any length)."""
+    half = d // 2
+    freqs = 10_000.0 ** (-jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; full / local / SWA via window scalar)
+# ---------------------------------------------------------------------------
+
+
+def _init_linear(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def attn_init(cfg: ModelConfig, key: jax.Array, cross: bool = False) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init_linear(ks[0], (d, hq * dh)),
+        "wk": _init_linear(ks[1], (d, hkv * dh)),
+        "wv": _init_linear(ks[2], (d, hkv * dh)),
+        "wo": _init_linear(ks[3], (hq * dh, d)),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCache:
+    """Decode-time KV cache; ``length`` slots (= window for local layers)."""
+
+    k: jax.Array          # (B, L, Hkv, Dh)
+    v: jax.Array          # (B, L, Hkv, Dh)
+    pos: jax.Array        # (L,) int32 absolute positions stored (-1 = empty)
+
+
+jax.tree_util.register_dataclass(
+    AttnCache, data_fields=["k", "v", "pos"], meta_fields=[]
+)
+
+
+def _project_qkv(cfg, p, x, x_kv, positions, kv_positions, spec, rules, is_cross):
+    b, s, _ = x.shape
+    dtype = x.dtype
+    q = (x @ p["wq"].astype(dtype)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (x_kv @ p["wk"].astype(dtype)).reshape(
+        b, x_kv.shape[1], cfg.n_kv_heads, cfg.head_dim
+    )
+    v = (x_kv @ p["wv"].astype(dtype)).reshape(
+        b, x_kv.shape[1], cfg.n_kv_heads, cfg.head_dim
+    )
+    if not is_cross and not cfg.is_encdec:
+        q = rope(q, positions, spec.rope_theta)
+        k = rope(k, kv_positions, spec.rope_theta)
+    if not rules.attn_unconstrained:
+        # internal constraints use seq=None: under sequence parallelism the
+        # residual stream is seq-sharded only BETWEEN layers; inside the
+        # mixer seq is gathered and heads carry the model axis (Ulysses).
+        q = shard(q, rules, "batch", None, "heads", "head_dim")
+        # full-sequence attention: kv_heads shard when they cover the model
+        # axis, else REPLICATE (dh-sharding k/v here made GSPMD gather K/V
+        # to global batch in f32 — 2.7 TB/step at granite train_4k).  The
+        # dh-sharded layout is for CACHES only (decode memory), applied at
+        # the cache emit boundary.
+        k = shard(k, rules, "batch", None, "kv_heads", None)
+        v = shard(v, rules, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _attend(cfg, q, k, v, mask, rules, cache_sharded=False):
+    """q: (B,Sq,Hq,Dh), k/v: (B,Sk,Hkv,Dh), mask: (1,1,1,Sq,Sk) or None."""
+    b, sq, hq, dh = q.shape
+    hkv = cfg.n_kv_heads
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scale = 1.0 / np.sqrt(dh)
+    # scores: (B, Hkv, G, Sq, Sk).  Deliberately NOT sharding-constrained:
+    # forcing kv_heads onto the 16-way model axis when kv ∈ {1, 8} made
+    # GSPMD insert involuntary full rematerializations (replicate+reslice)
+    # around the attention transposes; propagation from q/k/v is strictly
+    # better in every measured cell (EXPERIMENTS.md §Perf baseline notes).
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    out = out.reshape(b, sq, hq * dh)
+    if rules.attn_unconstrained:
+        return out
+    return shard(out, rules, "batch", None, "heads")
+
+
+def _chunk_divisor(s: int, cap: int = 512) -> int:
+    if s <= cap:
+        return s
+    for c in range(cap, 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def _attend_qchunked(cfg, q, k, v, qpos_row, kpos_row, spec, causal, rules):
+    """Exact attention scanned over query chunks (flash-style memory).
+
+    Full (B,h,g,Sq,Sk) probs at train_4k/prefill_32k are the dominant
+    transient (gemma3 train: 4.3 GB/layer/device in f32).  Each chunk's
+    softmax axis (Sk) is complete, so chunking the QUERY dim is exact — no
+    online-softmax state needed; jax.checkpoint makes the backward
+    recompute per chunk.  qpos_row/kpos_row are (Sq,)/(Sk,) single rows —
+    masks must NOT be materialized per batch row.
+    """
+    b, sq, hq, dh = q.shape
+    c = _chunk_divisor(sq)
+    nc = sq // c
+    if nc == 1:
+        mask = None
+        if causal:
+            mask = (kpos_row[None, :] <= qpos_row[:, None])[None, None, None]
+            if spec.window > 0:
+                mask &= (kpos_row[None, :] > qpos_row[:, None] - spec.window)[
+                    None, None, None
+                ]
+        return _attend(cfg, q, k, v, mask, rules)
+
+    qc = q.reshape(b, nc, c, hq, dh).transpose(1, 0, 2, 3, 4)
+    pc = qpos_row.reshape(nc, c)
+
+    @jax.checkpoint
+    def chunk_fn(_, inp):
+        qi, pi = inp  # (B,C,H,Dh), (C,)
+        mask = None
+        if causal:
+            mask = (kpos_row[None, :] <= pi[:, None])[None, None, None]
+            if spec.window > 0:
+                mask &= (kpos_row[None, :] > pi[:, None] - spec.window)[
+                    None, None, None
+                ]
+        return None, _attend(cfg, qi, k, v, mask, rules)
+
+    _, out = lax.scan(chunk_fn, None, (qc, pc))  # (nc, B, C, H*Dh)
+    out = out.transpose(1, 0, 2, 3).reshape(b, sq, hq * dh)
+    if rules.attn_unconstrained:
+        return out
+    return shard(out, rules, "batch", None, "heads")
+
+
+def attn_forward(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    rules: ShardingRules,
+    *,
+    causal: bool = True,
+    x_kv: Optional[jax.Array] = None,
+    emit_cache: bool = False,
+) -> Tuple[jax.Array, Optional[AttnCache]]:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    is_cross = x_kv is not None
+    x_kv = x if x_kv is None else x_kv
+    kv_positions = positions if not is_cross else jnp.broadcast_to(
+        jnp.arange(x_kv.shape[1], dtype=jnp.int32)[None], (x.shape[0], x_kv.shape[1])
+    )
+    q, k, v = _project_qkv(
+        cfg, p, x, x_kv, positions, kv_positions, spec, rules, is_cross
+    )
+    # positions are uniform across the batch everywhere in this framework;
+    # masks are built from single (S,) rows so they broadcast (B,S,S) masks
+    # were a 1 GB/layer s32 transient at train_4k.
+    out = _attend_qchunked(
+        cfg, q, k, v, positions[0], kv_positions[0], spec, causal and not is_cross,
+        rules,
+    )
+    out = out @ p["wo"].astype(x.dtype)
+    out = shard(out, rules, "batch", "seq", "d_model")
+    cache = None
+    if emit_cache:
+        kc = shard(k, rules, "batch", "cache_seq", "kv_heads", "kv_head_dim")
+        vc = shard(v, rules, "batch", "cache_seq", "kv_heads", "kv_head_dim")
+        cache = AttnCache(k=kc, v=vc, pos=kv_positions[0].astype(jnp.int32))
+    return out, cache
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Params,
+    x: jax.Array,           # (B, 1, D)
+    idx: jax.Array,          # scalar int32: absolute position being generated
+    cache: AttnCache,
+    rules: ShardingRules,
+    *,
+    is_cross: bool = False,
+) -> Tuple[jax.Array, AttnCache]:
+    """Single-token decode with ring-buffer KV cache (windowed layers).
+
+    ``is_cross`` marks this call as the cross-attention sub-block (static
+    cache, no causal mask) — distinct from ``spec.cross_attn`` which merely
+    says the layer *has* such a sub-block.
+    """
+    b = x.shape[0]
+    dtype = x.dtype
+    positions = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+    if is_cross:
+        # Static cross-attention cache: no update, attend over all frames.
+        q = (x @ p["wq"].astype(dtype)).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        q = shard(q, rules, "batch", "seq", "heads", "head_dim")
+        out = _attend(cfg, q, cache.k, cache.v, None, rules, cache_sharded=True)
+        out = out @ p["wo"].astype(dtype)
+        return shard(out, rules, "batch", "seq", "d_model"), cache
+
+    q = (x @ p["wq"].astype(dtype)).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k_new = (x @ p["wk"].astype(dtype)).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v_new = (x @ p["wv"].astype(dtype)).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    if not cfg.is_encdec:  # enc-dec (whisper) uses sinusoidal-only positions
+        q = rope(q, positions, spec.rope_theta)
+        k_new = rope(k_new, positions, spec.rope_theta)
+    # The new KV slice MUST match the cache layout before the in-place
+    # update: an unconstrained (model-sharded) slice makes GSPMD reshard
+    # the ENTIRE 32k-token cache every step (measured 3.2 GB/step f32
+    # gathers at gemma3 decode_32k = 75% of the step's collectives).
+    k_new = shard(k_new, rules, "batch", None, "kv_heads", "kv_head_dim")
+    v_new = shard(v_new, rules, "batch", None, "kv_heads", "kv_head_dim")
+    if rules.attn_unconstrained:
+        # decode: align q's head_dim with the cache's kv_head_dim sharding
+        # so the score contraction is local per dh-shard + a tiny psum —
+        # the cache reads then split 16-way across the model axis instead
+        # of being replicated (memory term 33.7 -> ~4 ms/token) or
+        # re-gathered (2.15 GB/step).  EXPERIMENTS.md §Perf hillclimb C.
+        q = shard(q, rules, "batch", None, None, "kv_head_dim")
+    else:
+        q = shard(q, rules, "batch", "seq", "heads", "head_dim")
+
+    cache_len = cache.k.shape[1]
+    slot = (idx % cache_len).astype(jnp.int32)
+    k = lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, 1)
+    v = lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, 1)
+    pos = lax.dynamic_update_slice_in_dim(
+        cache.pos, idx[None].astype(jnp.int32), slot, 0
+    )
+    if not rules.attn_unconstrained:
+        k = shard(k, rules, "batch", "cache_seq", "kv_heads", "kv_head_dim")
+        v = shard(v, rules, "batch", "cache_seq", "kv_heads", "kv_head_dim")
+
+    valid = (pos >= 0) & (pos <= idx)
+    if spec.window > 0:
+        valid &= pos > idx - spec.window
+    mask = valid[None, None, None, None, :]  # (1,1,1,1,L)
+    out = _attend(cfg, q, k.astype(dtype), v.astype(dtype), mask, rules,
+                  cache_sharded=True)
+    out = out @ p["wo"].astype(dtype)
+    out = shard(out, rules, "batch", "seq", "d_model")
+    return out, AttnCache(k=k, v=v, pos=pos)
+
+
+def init_attn_cache(
+    cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int, dtype=jnp.bfloat16
+) -> AttnCache:
+    length = min(spec.window, max_seq) if spec.window > 0 else max_seq
+    return AttnCache(
+        k=jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        pos=jnp.full((length,), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN: SwiGLU / GeGLU / squared-ReLU / plain GELU
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": _init_linear(ks[0], (d, f)),
+        "w2": _init_linear(ks[1], (f, d)),
+    }
+    if cfg.act in ("silu", "gelu"):
+        p["w3"] = _init_linear(ks[2], (d, f))
+    return p
+
+
+def ffn_forward(cfg: ModelConfig, p: Params, x: jax.Array, rules) -> jax.Array:
+    dtype = x.dtype
+    h = x @ p["w1"].astype(dtype)
+    h = shard(h, rules, "batch", None, "mlp")
+    if cfg.act == "silu":
+        h = jax.nn.silu(h) * (x @ p["w3"].astype(dtype))
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h) * (x @ p["w3"].astype(dtype))
+    elif cfg.act == "relu2":
+        r = jax.nn.relu(h)
+        h = r * r
+    elif cfg.act == "gelu_plain":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(cfg.act)
+    h = shard(h, rules, "batch", None, "mlp")
+    out = h @ p["w2"].astype(dtype)
+    return shard(out, rules, "batch", "seq", "d_model")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    vp, d = cfg.padded_vocab, cfg.d_model
+    ks = jax.random.split(key, 2)
+    p = {"embed": jax.random.normal(ks[0], (vp, d), jnp.float32) * 0.02}
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(ks[1], (d, vp), jnp.float32) * 0.02
+    return p
+
+
+def embed_tokens(cfg, p, tokens, rules) -> jax.Array:
+    emb = p["embed"].astype(jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32)
+    x = jnp.take(emb, tokens, axis=0)
+    return shard(x, rules, "batch", "seq", "d_model")
+
+
+def unembed(cfg, p, x, rules) -> jax.Array:
+    dtype = x.dtype
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = x @ w.astype(dtype)
+    if cfg.logits_softcap > 0:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    # seq=None: logits live inside the chunked loss (seq is a chunk there),
+    # and under SP 'seq' maps to the same axis as 'vocab'.
+    return shard(logits, rules, "batch", None, "vocab")

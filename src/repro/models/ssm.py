@@ -1,0 +1,209 @@
+"""Mamba-2 SSD (state-space duality) block — chunked matmul formulation.
+
+The SSD algorithm (Dao & Gu, 2024) is the TPU-native way to run selective
+SSMs: instead of a length-S sequential scan (VPU-serial), the sequence is
+split into chunks of Q tokens; within-chunk interactions are dense Q×Q
+matmuls (MXU) and only the nc = S/Q chunk boundary states thread through a
+`lax.scan`.  Decode keeps a constant-size state (B, H, N, P) — the reason
+``long_500k`` runs for SSM/hybrid archs.
+
+Layout per layer (ngroups=1, shared B/C across heads as in mamba2-780m):
+  in_proj : (D, 2·di + 2·N + H)   -> z, x, B, C, dt
+  conv1d  : depthwise causal width-4 over [x, B, C] channels
+  A_log, D̂, dt_bias : (H,)
+  norm    : gated RMSNorm scale (di,)
+  out_proj: (di, D)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.sharding import ShardingRules, shard
+
+Params = Dict[str, Any]
+
+
+def ssm_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.ssm_conv_width
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * n + h), jnp.float32)
+        / np.sqrt(d),
+        "conv_w": jax.random.normal(ks[1], (cw, conv_ch), jnp.float32) / np.sqrt(cw),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, float(h), h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[3], (di, d), jnp.float32) / np.sqrt(di),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: xbc (B,S,C), w (cw,C) -> (B,S,C)."""
+    cw = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(cw):  # cw = 4: unrolled shifts beat a conv call on TPU
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _gated_norm(p: Params, y: jax.Array, z: jax.Array) -> jax.Array:
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    ms = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * lax.rsqrt(ms + 1e-6) * p["norm_scale"]).astype(y.dtype)
+
+
+def ssm_forward(
+    cfg: ModelConfig, p: Params, x: jax.Array, rules: ShardingRules
+) -> jax.Array:
+    """Full-sequence SSD. x: (B, S, D) -> (B, S, D)."""
+    bsz, s, _ = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    q = cfg.ssm_chunk
+    dtype = x.dtype
+
+    zxbcdt = x @ p["in_proj"].astype(dtype)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    z = shard(z, rules, "batch", None, "mlp")
+    xbc = _causal_conv(xbc, p["conv_w"].astype(dtype), p["conv_b"].astype(dtype))
+    xbc = jax.nn.silu(xbc)
+    xin = shard(xbc[..., :di], rules, "batch", None, "mlp")
+    bmat = xbc[..., di : di + n]
+    cmat = xbc[..., di + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,) < 0
+    da = dt * a[None, None, :]  # (B,S,H) log-decay, <= 0
+
+    # pad S to chunk multiple (dt=0 on pad -> identity decay, zero input)
+    pad = (-s) % q
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+
+    xh = xin.reshape(bsz, nc, q, h, pd)
+    bc_ = bmat.reshape(bsz, nc, q, n)
+    cc_ = cmat.reshape(bsz, nc, q, n)
+    dtc = dt.reshape(bsz, nc, q, h)
+    dac = da.reshape(bsz, nc, q, h).astype(jnp.float32)
+
+    cum = jnp.cumsum(dac, axis=2)  # (B,nc,Q,H) inclusive
+    xbar = xh * dtc[..., None].astype(dtype)  # dt-scaled input
+
+    # --- intra-chunk: (L ⊙ C Bᵀ) x̄ ---
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: in the upper triangle li > 0 can overflow to inf and
+    # inf·0 => NaN cotangents through jnp.where's backward.
+    li = jnp.where(tri[None, None, :, :, None], li, -1e30)
+    decay = jnp.exp(li).astype(dtype)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc_, bc_)  # (B,nc,Q,Q)
+    att = cb[..., None] * decay  # (B,nc,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xbar)
+
+    # --- chunk states + inter-chunk scan ---
+    cum_end = cum[:, :, -1:, :]  # (B,nc,1,H)
+    seg = jnp.exp((cum_end - cum)).astype(dtype)  # decay from j to chunk end
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc_, seg, xbar)  # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum_end[:, :, 0, :]).astype(dtype)  # (B,nc,H)
+
+    def scan_body(hprev, inputs):
+        st, dk = inputs  # (B,H,N,P), (B,H)
+        hnew = hprev * dk[:, :, None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, n, pd), dtype)
+    _, hprevs = lax.scan(
+        scan_body,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    hprevs = jnp.moveaxis(hprevs, 0, 1)  # (B,nc,H,N,P) state entering chunk
+
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", cc_, hprevs, jnp.exp(cum).astype(dtype))
+    y = y_intra + y_inter  # (B,nc,Q,H,P)
+    y = y.reshape(bsz, nc * q, h, pd)[:, :s]
+    y = y + xin.reshape(bsz, nc * q, h, pd)[:, :s] * p["d_skip"].astype(dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = shard(y, rules, "batch", None, "mlp")
+
+    y = _gated_norm(p, y, z[:, :s])
+    out = y @ p["out_proj"].astype(dtype)
+    return shard(out, rules, "batch", "seq", "d_model")
+
+
+# ---------------------------------------------------------------------------
+# Decode: constant-size state update
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "h": jnp.zeros((batch, h, n, pd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di + 2 * n), dtype),
+    }
+
+
+def ssm_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B, 1, D)
+    cache: Dict[str, Any],
+    rules: ShardingRules,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    bsz = x.shape[0]
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dtype = x.dtype
+
+    zxbcdt = x[:, 0, :] @ p["in_proj"].astype(dtype)  # (B, ...)
+    z, xbc_new, dt_raw = _split_proj(cfg, zxbcdt)
+
+    window = jnp.concatenate([cache["conv"].astype(dtype), xbc_new[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(dtype))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(dtype))
+    new_conv = window[:, 1:, :]
+
+    xin = conv_out[:, :di].reshape(bsz, h, pd)
+    bvec = conv_out[:, di : di + n]
+    cvec = conv_out[:, di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None, :])  # (B,H)
+
+    hstate = cache["h"]
+    xbar = xin.astype(jnp.float32) * dt[:, :, None]
+    hnew = hstate * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", bvec.astype(jnp.float32), xbar
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cvec.astype(jnp.float32), hnew).astype(dtype)
+    y = y + xin * p["d_skip"].astype(dtype)[None, :, None]
+    y = y.reshape(bsz, 1, di)
+    y = _gated_norm(p, y, z[:, None, :])
+    out = y @ p["out_proj"].astype(dtype)
+    out = shard(out, rules, "batch", "seq", "d_model")
+    return out, {"h": hnew, "conv": new_conv.astype(cache["conv"].dtype)}

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptimizerConfig,
+    apply_updates,
+    init_opt_state,
+    lr_at,
+)

@@ -1,0 +1,1 @@
+from repro.serve.retrieval import RetrievalStore, knn_lm_mix  # noqa: F401

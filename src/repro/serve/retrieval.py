@@ -1,0 +1,62 @@
+"""Hilbert-forest-backed retrieval for serving (kNN-LM-style).
+
+The paper's index is wired to the model zoo here: a datastore of
+(hidden-state -> next-token) pairs is indexed with the Task-1 pipeline
+(forest + sketches + 4-bit codes), and at decode time the last hidden state
+queries it; retrieved next-token distances form p_knn, mixed with the
+model's softmax (Khandelwal et al., 2020):
+
+    p(w) = (1-λ)·p_model(w) + λ·p_knn(w),
+    p_knn ∝ Σ_{(h_i,w_i) ∈ kNN} 1[w_i=w]·exp(-d(h, h_i)/T)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import search
+from repro.core.types import ForestConfig, SearchParams
+
+
+@dataclasses.dataclass
+class RetrievalStore:
+    index: search.HilbertForestIndex
+    forest_cfg: ForestConfig
+    values: jax.Array          # (n,) int32 next-token per datastore entry
+
+    @classmethod
+    def build(cls, keys: jax.Array, values: jax.Array,
+              forest_cfg: ForestConfig) -> "RetrievalStore":
+        """keys: (n, d) hidden states; values: (n,) next tokens."""
+        idx = search.build_index(keys, forest_cfg)
+        return cls(index=idx, forest_cfg=forest_cfg, values=values)
+
+    def lookup(self, queries: jax.Array, params: SearchParams
+               ) -> Tuple[jax.Array, jax.Array]:
+        """(Q, d) hidden states -> (ids (Q,k), sq-dists (Q,k))."""
+        return search.search(self.index, queries, params, self.forest_cfg)
+
+
+def knn_lm_mix(
+    logits: jax.Array,        # (B, V) model logits
+    hidden: jax.Array,        # (B, d) final hidden states
+    store: RetrievalStore,
+    params: SearchParams,
+    lam: float = 0.25,
+    temperature: float = 1.0,
+) -> jax.Array:
+    """Return log of the mixed distribution (B, V)."""
+    ids, d2 = store.lookup(hidden, params)            # (B, k)
+    w = jax.nn.softmax(-d2 / temperature, axis=-1)    # (B, k)
+    tok = store.values[ids]                           # (B, k)
+    v = logits.shape[-1]
+    p_knn = jnp.zeros_like(logits).at[
+        jnp.arange(logits.shape[0])[:, None], tok
+    ].add(w)
+    p_model = jax.nn.softmax(logits, axis=-1)
+    mixed = (1.0 - lam) * p_model + lam * p_knn
+    return jnp.log(jnp.maximum(mixed, 1e-20))

@@ -1,0 +1,147 @@
+"""Continuous-batching serve scheduler (vLLM-style slot management).
+
+Static-shape JAX decode steps want a FIXED batch; real traffic is ragged.
+The engine multiplexes a stream of requests onto ``n_slots`` persistent
+decode lanes:
+
+  * a new request prefills into a free lane (its caches are written at the
+    lane index);
+  * every engine step decodes ALL lanes in one jitted call (lanes sit at
+    DIFFERENT sequence positions — the cache layout is lane-major, every
+    lane carries its own ring/pos state, and the step vmaps over lanes);
+  * finished lanes (EOS or max_tokens) are freed and refilled immediately —
+    no batch drain.
+
+The engine is model-agnostic: it drives the same ``prefill``/``decode_step``
+the dry-run lowers, for every arch in the zoo, and composes with the
+kNN-LM retrieval mix (pass a ``sample`` closure over mixed logits).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.sharding import ShardingRules
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                 # next position to write
+    remaining: int = 0
+
+
+class ContinuousBatchingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        rules: ShardingRules,
+        n_slots: int = 4,
+        max_seq: int = 128,
+        sample: Optional[Callable[[jax.Array], jax.Array]] = None,
+    ):
+        self.cfg, self.params, self.rules = cfg, params, rules
+        self.n_slots, self.max_seq = n_slots, max_seq
+        self.sample = sample or (lambda logits: jnp.argmax(logits, axis=-1))
+        self.queue: Deque[Request] = deque()
+        self.slots = [_Slot() for _ in range(n_slots)]
+        # lane-major caches: leaf shape (n_slots, *per-lane-leaf); every lane
+        # is a full batch=1 cache with its OWN pos/ring state.
+        cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+        one = model.make_decode_caches(cfg, 1, max_seq, dtype=cdt)
+        self.caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_slots,) + a.shape).copy(), one
+        )
+        self.next_tok = jnp.zeros((n_slots,), jnp.int32)
+        self.finished: Dict[int, Request] = {}
+        self._steps = 0
+
+        def step_fn(params, tokens, positions, caches):
+            def lane(tok, pos, cache):
+                logits, new_c = model.decode_step(
+                    cfg, params, tok[None, None], pos, cache, rules)
+                return logits[0], new_c
+
+            return jax.vmap(lane, in_axes=(0, 0, 0))(tokens, positions, caches)
+
+        self._decode = jax.jit(step_fn)
+        self._prefill = jax.jit(
+            lambda params, tokens: model.prefill(cfg, params, tokens, rules))
+
+    # --- public API ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 1000) -> Dict[int, Request]:
+        """Drive the engine until the queue and all lanes drain."""
+        while (self.queue or any(s.req for s in self.slots)) and \
+                self._steps < max_steps:
+            self._admit()
+            self._step()
+        return self.finished
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s.req is not None)
+
+    # --- internals ---------------------------------------------------------
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.req is None and self.queue:
+                self._prefill_into(i, self.queue.popleft())
+
+    def _prefill_into(self, i: int, req: Request) -> None:
+        tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, caches1 = self._prefill(self.params, tokens)
+        caches1 = model.pad_caches(self.cfg, caches1, self.max_seq)
+        self.caches = jax.tree.map(
+            lambda full, one: full.at[i].set(one), self.caches, caches1)
+        tok = int(self.sample(logits)[0])
+        self.next_tok = self.next_tok.at[i].set(tok)
+        self.slots[i] = _Slot(req=req, pos=len(req.prompt),
+                              remaining=req.max_new_tokens)
+        req.output.append(tok)
+
+    def _step(self) -> None:
+        if self.active == 0:
+            return
+        positions = jnp.asarray(
+            [s.pos if s.req else 0 for s in self.slots], jnp.int32)
+        logits, self.caches = self._decode(
+            self.params, self.next_tok, positions, self.caches)
+        toks = self.sample(logits).astype(jnp.int32)
+        self.next_tok = toks
+        self._steps += 1
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue
+            t = int(toks[i])
+            slot.req.output.append(t)
+            slot.pos += 1
+            slot.remaining -= 1
+            if (slot.remaining <= 0
+                    or (slot.req.eos_id is not None and t == slot.req.eos_id)
+                    or slot.pos >= self.max_seq):
+                slot.req.done = True
+                self.finished[slot.req.uid] = slot.req
+                self.slots[i] = _Slot()

@@ -1,0 +1,1 @@
+from repro.train.train_loop import TrainState, make_train_step  # noqa: F401

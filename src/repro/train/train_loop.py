@@ -1,0 +1,123 @@
+"""Train step: microbatch gradient accumulation + AdamW, GSPMD-ready.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function.  Gradient accumulation runs as a ``lax.scan`` over microbatches
+(bounding live activation memory — the lever that fits nemotron-4-340b
+train_4k); accumulation dtype is configurable (bf16 accumulate = the DP
+collective moves half the bytes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig, apply_updates, init_opt_state
+from repro.sharding import ShardingRules
+
+TrainState = Dict[str, Any]  # {"params", "opt", "step"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    n_microbatches: int = 1
+    accum_dtype: str = "float32"   # "bfloat16" halves DP all-reduce bytes
+    optimizer: OptimizerConfig = OptimizerConfig()
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> TrainState:
+    params = model.init_params(cfg, key)
+    return {
+        "params": params,
+        "opt": init_opt_state(params, tcfg.optimizer),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg, tcfg), jax.random.key(0)
+    )
+
+
+def _split_micro(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
+    def r(x):
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return {k: r(v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, rules: ShardingRules,
+                    param_pspecs=None):
+    adt = jnp.bfloat16 if tcfg.accum_dtype == "bfloat16" else jnp.float32
+
+    def loss_fn(params, mb):
+        # Pre-cast big weights to bf16 AND pin them with a sharding
+        # constraint: the constraint is what stops GSPMD from hoisting the
+        # FSDP all-gather above the convert (f32 wire traffic; XLA strips
+        # bare optimization_barriers).  model._bf16_params then no-ops.
+        if param_pspecs is not None:
+            leaves, treedef = jax.tree_util.tree_flatten(params)
+            cast = [
+                jax.lax.with_sharding_constraint(
+                    a.astype(jnp.bfloat16), s)
+                if a.dtype == jnp.float32 and a.size > 1_000_000 else a
+                for a, s in zip(leaves, _spec_leaves)
+            ]
+            params = jax.tree_util.tree_unflatten(treedef, cast)
+        return model.train_loss(cfg, params, mb, rules)
+
+    if param_pspecs is not None:
+        from jax.sharding import PartitionSpec as _P
+
+        _spec_leaves = jax.tree_util.tree_flatten(
+            param_pspecs, is_leaf=lambda x: isinstance(x, _P))[0]
+
+    def constrain(tree):
+        # The accumulated gradients MUST carry the params' shardings: an
+        # unconstrained scan carry lets GSPMD replicate gsum, all-gathering
+        # every per-microbatch gradient in f32 (nemotron-4-340b train_4k:
+        # 4.2 TB/device of f32 weight-shaped gathers — §Perf hillclimb B).
+        if param_pspecs is None:
+            return tree
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        out = [jax.lax.with_sharding_constraint(a, s)
+               for a, s in zip(leaves, _spec_leaves)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state["params"]
+        n = tcfg.n_microbatches
+        if n == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain(grads)
+        else:
+            micro = _split_micro(batch, n)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(adt), gsum, g)
+                return (constrain(gsum), lsum + l), None
+
+            g0 = constrain(jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params))
+            (gsum, lsum), _ = lax.scan(body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: (g / n).astype(jnp.float32), gsum)
+            loss = lsum / n
+
+        new_params, new_opt, metrics = apply_updates(
+            params, grads, state["opt"], tcfg.optimizer
+        )
+        metrics["loss"] = loss
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step

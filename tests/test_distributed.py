@@ -1,0 +1,18 @@
+"""Distributed Hilbert sort / kNN graph — runs in a subprocess with 8
+simulated devices so this pytest process keeps its 1-device view."""
+
+import os
+import subprocess
+import sys
+
+def test_distributed_sample_sort_and_graph():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "distributed_check.py")],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout[-3000:]}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in r.stdout

@@ -1,0 +1,34 @@
+"""Kernel↔pipeline integration: search with use_kernels=True is identical."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import search
+from repro.core.types import ForestConfig, SearchParams
+from repro.data import ann_datasets
+from repro.kernels.hamming import hamming_rows
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("q,k,w", [(1, 4, 3), (7, 33, 12), (130, 16, 14)])
+def test_hamming_rows_kernel_matches_oracle(q, k, w):
+    a = jnp.asarray(RNG.integers(0, 2**32, (q, w), dtype=np.uint32))
+    c = jnp.asarray(RNG.integers(0, 2**32, (q, k, w), dtype=np.uint32))
+    got = hamming_rows(a, c, use_kernel=True, interpret=True)
+    ref = hamming_rows(a, c, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_search_with_kernels_is_identical():
+    data, queries = ann_datasets.lowrank_dataset_with_queries(
+        1500, 32, 64, n_clusters=8, r=4, seed=0)
+    cfg = ForestConfig(n_trees=4, bits=4, key_bits=64, leaf_size=16, seed=0)
+    idx = search.build_index(jnp.asarray(data), cfg)
+    params = SearchParams(k1=16, k2=64, h=1, k=8)
+    ids0, d0 = search.search(idx, jnp.asarray(queries), params, cfg)
+    ids1, d1 = search.search(idx, jnp.asarray(queries), params, cfg,
+                             use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-6)

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced configs, one train/forward/decode
+step on CPU, asserting output shapes and finiteness (deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.sharding import ShardingRules
+
+RULES = ShardingRules()  # no mesh on CPU: all constraints no-op
+
+B, S = 2, 32
+
+
+def _batch_for(cfg, rng):
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": tokens, "labels": labels, "mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.n_patches:
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.patch_dim)), jnp.float32
+        )
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_frames, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_grad_step(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    rng = np.random.default_rng(0)
+    params = model.init_params(cfg, jax.random.key(0))
+    batch = _batch_for(cfg, rng)
+
+    logits, aux, _ = model.forward(
+        cfg, params, batch["tokens"], RULES,
+        patches=batch.get("patches"), frames=batch.get("frames"),
+    )
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), "NaN/Inf logits"
+
+    loss, grads = jax.value_and_grad(
+        lambda p: model.train_loss(cfg, p, batch, RULES)
+    )(params)
+    assert bool(jnp.isfinite(loss)), f"loss={loss}"
+    # loss should be near log(vocab) for random params (sanity on magnitude)
+    assert 0.1 * np.log(cfg.vocab_size) < float(loss) < 10 * np.log(cfg.padded_vocab)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_prefill_then_decode_consistency(arch):
+    """Prefill + decode must reproduce the teacher-forced forward logits.
+
+    Run in float32: random-init logits are nearly flat, and bf16 noise
+    between the two (mathematically identical) paths flips argmaxes; f32
+    keeps the test sensitive to real path bugs instead of rounding.
+    """
+    import dataclasses as _dc
+
+    cfg = _dc.replace(configs.get_config(arch, smoke=True), compute_dtype="float32")
+    rng = np.random.default_rng(1)
+    params = model.init_params(cfg, jax.random.key(1))
+    batch = _batch_for(cfg, rng)
+    tokens = batch["tokens"]
+
+    full_logits, _, _ = model.forward(
+        cfg, params, tokens, RULES,
+        patches=batch.get("patches"), frames=batch.get("frames"),
+    )
+
+    s_pre = S - 4
+    pre_logits, caches = model.prefill(
+        cfg, params, tokens[:, :s_pre], RULES,
+        patches=batch.get("patches"), frames=batch.get("frames"),
+    )
+    caches = model.pad_caches(cfg, caches, S)
+    np.testing.assert_allclose(
+        np.asarray(pre_logits, np.float32),
+        np.asarray(full_logits[:, s_pre - 1], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+    # pad ring caches out to S slots where needed: rebuild decode caches at
+    # max_seq=S and copy prefill contents — here windows are < s_pre so the
+    # ring layout is already correct; decode 4 more steps.
+    logits_steps = []
+    for t in range(s_pre, S):
+        step_logits, caches = model.decode_step(
+            cfg, params, tokens[:, t - 1 : t] if False else tokens[:, t : t + 1],
+            jnp.int32(t), caches, RULES,
+        )
+        logits_steps.append(step_logits)
+    for j, t in enumerate(range(s_pre, S)):
+        a = np.asarray(logits_steps[j], np.float32)
+        b = np.asarray(full_logits[:, t], np.float32)
+        np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-2)
+        assert (a.argmax(-1) == b.argmax(-1)).all()
+
+
+def test_param_counts_at_published_scale():
+    """Analytic param counts land near the published model sizes."""
+    expect = {
+        "yi_34b": 34e9,
+        "nemotron_4_340b": 340e9,
+        "mamba2_780m": 0.78e9,
+        "granite_3_8b": 8e9,
+        "mixtral_8x22b": 141e9,
+        "jamba_v01_52b": 52e9,
+    }
+    for arch, n in expect.items():
+        cfg = configs.get_config(arch)
+        got = cfg.param_count()
+        assert 0.6 * n < got < 1.45 * n, f"{arch}: {got:.3g} vs {n:.3g}"
+
+
+def test_moe_active_params_smaller():
+    cfg = configs.get_config("mixtral_8x22b")
+    assert cfg.active_param_count() < 0.45 * cfg.param_count()
+
+
+def test_long_500k_applicability_rules():
+    runs = {a: configs.shape_applicable(configs.get_config(a), "long_500k")[0]
+            for a in configs.ARCH_IDS}
+    assert runs["mamba2_780m"] and runs["jamba_v01_52b"]
+    assert runs["gemma3_1b"] and runs["mixtral_8x22b"]
+    assert not runs["yi_34b"] and not runs["nemotron_4_340b"]
+    assert not runs["whisper_small"] and not runs["granite_3_8b"]
+    assert not runs["llava_next_34b"] and not runs["granite_moe_1b"]

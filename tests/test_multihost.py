@@ -1,0 +1,36 @@
+"""Multi-host topology resolution (env parsing; no cluster needed)."""
+
+from repro.launch.multihost import host_batch_slice, resolve_topology
+
+
+def test_slurm_resolution():
+    env = {"SLURM_PROCID": "3", "SLURM_NTASKS": "8",
+           "SLURM_STEP_NODELIST": "gpu[003-010]"}
+    t = resolve_topology(env=env)
+    assert (t.host_id, t.n_hosts, t.source) == (3, 8, "slurm")
+    assert t.coordinator == "gpu003:12321"
+
+
+def test_gke_tpu_resolution():
+    env = {"TPU_WORKER_ID": "1",
+           "TPU_WORKER_HOSTNAMES": "t1k-w0,t1k-w1,t1k-w2,t1k-w3"}
+    t = resolve_topology(env=env)
+    assert (t.host_id, t.n_hosts, t.source) == (1, 4, "gke")
+    assert t.coordinator.startswith("t1k-w0:")
+
+
+def test_manual_and_single():
+    t = resolve_topology(coordinator="10.0.0.1:1234", host_id=2, n_hosts=4)
+    assert t.source == "manual" and t.coordinator == "10.0.0.1:1234"
+    t1 = resolve_topology(env={})
+    assert (t1.n_hosts, t1.source) == (1, "single")
+
+
+def test_host_batch_slice_partition():
+    envs = [{"SLURM_PROCID": str(i), "SLURM_NTASKS": "4",
+             "SLURM_NODELIST": "n1"} for i in range(4)]
+    slices = [host_batch_slice(256, resolve_topology(env=e)) for e in envs]
+    covered = []
+    for a, b in slices:
+        covered.extend(range(a, b))
+    assert covered == list(range(256))

@@ -1,0 +1,64 @@
+"""Hypothesis property tests for the search/graph invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hilbert, search
+from repro.core.types import ForestConfig, SearchParams
+from repro.data import ann_datasets
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(300, 900),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_search_invariants(n, d, seed):
+    """Results are valid ids, deduped, with ascending true-ish distances."""
+    data = ann_datasets.lowrank_embeddings(n, d, n_clusters=8, r=4, seed=seed)
+    queries = data[:16] + 1e-3  # near-copies: top-1 should often be the row
+    cfg = ForestConfig(n_trees=4, bits=4, key_bits=min(64, d * 4),
+                       leaf_size=16, seed=0)
+    idx = search.build_index(jnp.asarray(data), cfg)
+    params = SearchParams(k1=16, k2=64, h=1, k=8)
+    ids, dists = search.search(idx, jnp.asarray(queries), params, cfg)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    assert ((ids >= 0) & (ids < n)).all()
+    for row in ids:
+        assert len(set(row.tolist())) == len(row)
+    assert (np.diff(dists, axis=1) >= -1e-4).all()
+    # a near-copy query finds its source row in the top-8 most of the time
+    hits = sum(int(i in ids[i]) for i in range(16))
+    assert hits >= 12, hits
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    d=st.integers(2, 24),
+    bits=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_transpose_involution_property(d, bits, seed):
+    rng = np.random.default_rng(seed)
+    coords = rng.integers(0, 1 << bits, size=(64, d)).astype(np.uint32)
+    tr = hilbert.axes_to_transpose(jnp.asarray(coords), bits)
+    back = hilbert.transpose_to_axes(tr, bits)
+    np.testing.assert_array_equal(np.asarray(back), coords)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hilbert_keys_invariant_to_point_order(seed):
+    """Keys are per-point functions: permuting inputs permutes keys."""
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(128, 12)).astype(np.float32)
+    lo = jnp.full((12,), -5.0)
+    hi = jnp.full((12,), 5.0)
+    k1 = hilbert.hilbert_keys(jnp.asarray(pts), bits=4, key_bits=48, lo=lo, hi=hi)
+    perm = rng.permutation(128)
+    k2 = hilbert.hilbert_keys(jnp.asarray(pts[perm]), bits=4, key_bits=48,
+                              lo=lo, hi=hi)
+    np.testing.assert_array_equal(np.asarray(k1)[perm], np.asarray(k2))
