@@ -3,59 +3,38 @@
 The paper reports, for 23M×384: forest (160 trees) 38m56s, sketches 5s,
 quantization 2m32s, master sort 14s.  The scaled reproduction checks the
 ORDERING (forest ≫ quantization > master sort ≳ sketches) and prints the
-split for the container-scale problem.
+split for the container-scale problem, using the facade's instrumented
+build (``repro.index.build_with_timings``) — the same code path as
+``HilbertIndex.build``.
 """
 
-import time
-
-import jax
 import jax.numpy as jnp
 
-from repro.core import forest as forest_lib
-from repro.core import hilbert, quantize, sketch
-from repro.core.types import ForestConfig
 from repro.data import ann_datasets
+from repro.index import ForestConfig, IndexConfig, build_with_timings
 
 N, D, TREES = 20000, 384, 16
 
 
 def main():
     data = jnp.asarray(ann_datasets.lowrank_embeddings(N, D, seed=0))
-    cfg = ForestConfig(n_trees=TREES, bits=4, key_bits=448, leaf_size=32)
-
-    t0 = time.time()
-    f = forest_lib.build_forest(data, cfg)
-    jax.block_until_ready(f.orders)
-    t_forest = time.time() - t0
-
-    t0 = time.time()
-    quant = quantize.fit(data, bits=4)
-    codes = quantize.encode(quant, data)
-    jax.block_until_ready(codes)
-    t_quant = time.time() - t0
-
-    t0 = time.time()
-    sks = sketch.sketches_from_codes(codes)
-    jax.block_until_ready(sks)
-    t_sketch = time.time() - t0
-
-    t0 = time.time()
-    order, _ = hilbert.hilbert_sort(
-        data, bits=cfg.bits, key_bits=cfg.key_bits, lo=f.lo, hi=f.hi
+    cfg = IndexConfig(
+        forest=ForestConfig(n_trees=TREES, bits=4, key_bits=448, leaf_size=32)
     )
-    jax.block_until_ready(order)
-    t_master = time.time() - t0
+
+    _, t = build_with_timings(data, cfg)
 
     print("phase,seconds")
-    print(f"forest({TREES} trees),{t_forest:.2f}")
-    print(f"quantization,{t_quant:.2f}")
-    print(f"sketches,{t_sketch:.2f}")
-    print(f"master_sort,{t_master:.2f}")
+    print(f"forest({TREES} trees),{t['forest']:.2f}")
+    print(f"quantization,{t['quantization']:.2f}")
+    print(f"sketches,{t['sketches']:.2f}")
+    print(f"master_sort,{t['master_sort']:.2f}")
     # paper ordering: forest dominates; sketches are near-free
-    assert t_forest > t_quant
-    assert t_forest > 5 * t_sketch
-    assert t_forest > 5 * t_master
-    return dict(forest=t_forest, quant=t_quant, sketch=t_sketch, master=t_master)
+    assert t["forest"] > t["quantization"]
+    assert t["forest"] > 5 * t["sketches"]
+    assert t["forest"] > 5 * t["master_sort"]
+    return dict(forest=t["forest"], quant=t["quantization"],
+                sketch=t["sketches"], master=t["master_sort"])
 
 
 if __name__ == "__main__":

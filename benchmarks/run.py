@@ -1,5 +1,8 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
+All table/phase benchmarks run on the unified ``repro.index.HilbertIndex``
+API (build once → search / knn_graph off the same artifact).
+
   table1   — Task-1 recall/time grid (paper Table 1)
   table2   — Task-2 graph build time/recall (paper Table 2)
   phases   — preprocessing time split (paper §3.2)

@@ -12,9 +12,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import search
-from repro.core.types import ForestConfig, SearchParams
 from repro.data import ann_datasets
+from repro.index import ForestConfig, HilbertIndex, IndexConfig, SearchParams
 
 N, D, Q = 20000, 384, 500
 
@@ -42,13 +41,17 @@ def main(rows=None):
     out = []
     for (nt, k1, k2, h) in grid:
         if nt not in built:
-            cfg = ForestConfig(n_trees=nt, bits=4, key_bits=448, leaf_size=32, seed=0)
+            cfg = IndexConfig(
+                forest=ForestConfig(n_trees=nt, bits=4, key_bits=448,
+                                    leaf_size=32, seed=0),
+                store_points=False,
+            )
             t0 = time.time()
-            built[nt] = (search.build_index(data_j, cfg), cfg, time.time() - t0)
-        idx, cfg, tb = built[nt]
+            built[nt] = (HilbertIndex.build(data_j, cfg), time.time() - t0)
+        idx, tb = built[nt]
         params = SearchParams(k1=k1, k2=k2, h=h, k=30)
         t0 = time.time()
-        ids, _ = search.search(idx, queries_j, params, cfg)
+        ids, _ = idx.search(queries_j, params)
         ids.block_until_ready()
         ts = time.time() - t0
         rec = ann_datasets.recall_at_k(np.asarray(ids), gt)

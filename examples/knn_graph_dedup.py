@@ -13,9 +13,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import knn_graph
-from repro.core.types import ForestConfig, GraphParams
 from repro.data import ann_datasets
+from repro.index import ForestConfig, GraphParams, HilbertIndex, IndexConfig
 
 N, D, DUPS = 8000, 384, 400
 
@@ -30,9 +29,13 @@ true_pairs = {(int(N - DUPS + i), int(src[i])) for i in range(DUPS)}
 
 params = GraphParams(n_orders=16, k1=48, k2=96, k=15, seed=0)
 t0 = time.time()
-ids, d2 = knn_graph.build_knn_graph(
-    jnp.asarray(corpus), params, forest_cfg=ForestConfig(bits=4, key_bits=448)
+# One index serves both tasks: knn_graph() reuses its fitted quantizer and
+# sketches (n_trees=1 — Task 2 streams its own randomized orders instead).
+index = HilbertIndex.build(
+    jnp.asarray(corpus),
+    IndexConfig(forest=ForestConfig(n_trees=1, bits=4, key_bits=448)),
 )
+ids, d2 = index.knn_graph(params)
 print(f"kNN graph over {N:,} embeddings in {time.time()-t0:.1f}s")
 
 ids_n, d2_n = np.asarray(ids), np.asarray(d2)

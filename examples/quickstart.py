@@ -1,16 +1,20 @@
-"""Quickstart: build a Hilbert-forest index and run approximate k-NN search.
+"""Quickstart: build a self-describing Hilbert-forest index, search, persist.
 
     PYTHONPATH=src python examples/quickstart.py
+
+One object — ``HilbertIndex`` — covers the whole lifecycle: it carries its
+build config, so search takes no config argument, and ``save``/``load``
+round-trips the index bit-exactly (build once, serve from many workers).
 """
 
+import tempfile
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import search
-from repro.core.types import ForestConfig, SearchParams
 from repro.data import ann_datasets
+from repro.index import ForestConfig, HilbertIndex, IndexConfig, SearchParams
 
 # 1. A corpus of embedding-like vectors + held-out queries.
 data, queries = ann_datasets.lowrank_dataset_with_queries(
@@ -18,18 +22,21 @@ data, queries = ann_datasets.lowrank_dataset_with_queries(
 )
 
 # 2. Build the index: Hilbert forest + shared-MSB 4-bit codes + sketches.
-cfg = ForestConfig(n_trees=16, bits=4, key_bits=448, leaf_size=32, seed=0)
+cfg = IndexConfig(
+    forest=ForestConfig(n_trees=16, bits=4, key_bits=448, leaf_size=32, seed=0)
+)
 t0 = time.time()
-index = search.build_index(jnp.asarray(data), cfg)
-print(f"built {cfg.n_trees}-tree forest over {len(data):,}x{data.shape[1]} "
+index = HilbertIndex.build(jnp.asarray(data), cfg)
+print(f"built {cfg.forest.n_trees}-tree forest over {len(data):,}x{data.shape[1]} "
       f"in {time.time()-t0:.1f}s")
 for k, v in index.memory_report().items():
     print(f"  {k:>24}: {v/1e6:8.2f} MB")
 
 # 3. Search (Algorithm 1: forest -> sketches -> ±h expansion -> ADC top-k).
+#    No config to re-supply — the index is self-describing.
 params = SearchParams(k1=48, k2=384, h=2, k=30)
 t0 = time.time()
-ids, dists = search.search(index, jnp.asarray(queries), params, cfg)
+ids, dists = index.search(jnp.asarray(queries), params)
 print(f"searched {len(queries)} queries in {time.time()-t0:.2f}s")
 
 # 4. Verify against brute force.
@@ -37,3 +44,13 @@ gt, _ = ann_datasets.exact_knn(data, queries, 30)
 rec = ann_datasets.recall_at_k(np.asarray(ids), gt)
 print(f"recall@30 = {rec:.3f}  (paper Task-1 band: > 0.7)")
 assert rec > 0.7
+
+# 5. Persist and reload: the loaded index reproduces search bit-exactly.
+with tempfile.TemporaryDirectory() as td:
+    index.save(td + "/index")
+    ids2, dists2 = HilbertIndex.load(td + "/index").search(
+        jnp.asarray(queries), params
+    )
+    assert np.array_equal(np.asarray(ids), np.asarray(ids2))
+    assert np.array_equal(np.asarray(dists), np.asarray(dists2))
+    print("save/load round-trip: bit-identical search results")

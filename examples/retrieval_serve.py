@@ -16,13 +16,19 @@ import numpy as np
 
 from repro.core.types import ForestConfig, SearchParams
 from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.index import IndexConfig
 from repro.models import model
 from repro.optim import OptimizerConfig
 from repro.serve.retrieval import RetrievalStore, knn_lm_mix
 from repro.sharding import ShardingRules
 from repro.train.train_loop import TrainConfig, init_train_state, make_train_step
 
-from examples.train_lm import PRESETS  # noqa: E402
+try:
+    from examples.train_lm import PRESETS  # noqa: E402 (repo root on path)
+except ModuleNotFoundError as e:
+    if e.name not in ("examples", "examples.train_lm"):
+        raise  # a real missing dependency, not the path-layout difference
+    from train_lm import PRESETS  # noqa: E402 (script-dir invocation)
 
 cfg, rules = PRESETS["cpu-demo"], ShardingRules()
 tcfg = TrainConfig(optimizer=OptimizerConfig(lr=3e-3, warmup_steps=5,
@@ -45,7 +51,9 @@ for s in range(100, 104):
     vals_l.append(np.asarray(b["tokens"][:, 1:].reshape(-1)))
 keys = jnp.asarray(np.concatenate(keys_l))
 vals = jnp.asarray(np.concatenate(vals_l))
-fc = ForestConfig(n_trees=8, bits=4, key_bits=256, leaf_size=32)
+fc = IndexConfig(forest=ForestConfig(n_trees=8, bits=4, key_bits=256,
+                                     leaf_size=32),
+                 store_points=False)
 t0 = time.time()
 store = RetrievalStore.build(keys, vals, fc)
 print(f"[datastore] {keys.shape[0]:,} entries indexed in {time.time()-t0:.1f}s")

@@ -5,6 +5,9 @@ int32 permutation) plus a **rank directory** — every ``leaf_size``-th sorted
 key.  Locating a query's position is a vectorized lexicographic binary search
 over the directory, the exact analogue of the paper's compressed Hilbert tree
 (subtrees of ~100 points truncated to leaves; 76 MB vs 400 MB per tree).
+
+All functions here are pure jitted stages; the public entry point that
+composes them is :class:`repro.index.HilbertIndex`.
 """
 
 from __future__ import annotations

@@ -1,4 +1,11 @@
-"""Algorithm 2: approximate k-NN graph construction (Task 2).
+"""Algorithm 2 jitted stages: approximate k-NN graph construction (Task 2).
+
+.. note::
+   The public entry point is ``repro.index.HilbertIndex.knn_graph(params)``,
+   which **reuses the already-fit quantizer/codes/sketches** of a built
+   index instead of re-fitting.  This module holds the pure pipeline
+   (:func:`knn_graph_from_sketches`) the facade consumes, plus a
+   deprecation shim (:func:`build_knn_graph`) for one release.
 
 Every point is a query, so no tree/binary-search is needed: a point's
 stage-1 candidates are its ±k1/2 rank-neighbors in each Hilbert order, and
@@ -14,6 +21,7 @@ all n·k1 candidates (which would be ~92 GB at challenge scale).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Tuple
 
 import jax
@@ -24,13 +32,14 @@ from jax import lax
 from repro.core import hilbert, quantize, sketch
 from repro.core.types import ForestConfig, GraphParams, QuantizerConfig
 
-__all__ = ["build_knn_graph"]
+__all__ = ["build_knn_graph", "knn_graph_from_sketches"]
 
 _INF = jnp.int32(2**30)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "key_bits"))
-def _order_and_rank(points, lo, hi, perm, flip, *, bits, key_bits):
+def order_and_rank(points, lo, hi, perm, flip, *, bits, key_bits):
+    """One Hilbert order + its inverse rank (pure stage)."""
     order, _ = hilbert.hilbert_sort(
         points, bits=bits, key_bits=key_bits, lo=lo, hi=hi, perm=perm, flip=flip
     )
@@ -40,7 +49,7 @@ def _order_and_rank(points, lo, hi, perm, flip, *, bits, key_bits):
 
 
 @functools.partial(jax.jit, static_argnames=("k1", "k2"))
-def _merge_order(best_id, best_dist, order, rank, sketches, *, k1, k2):
+def merge_order(best_id, best_dist, order, rank, sketches, *, k1, k2):
     """Merge one Hilbert order's rank-window candidates into the top-k2."""
     n = order.shape[0]
     half = k1 // 2
@@ -69,16 +78,58 @@ def _merge_order(best_id, best_dist, order, rank, sketches, *, k1, k2):
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def _final_select(points, best_id, *, k):
+def final_select_chunk(points, best_id_chunk, row_start, *, k):
     """Exact fp32 distances to the k2 survivors; top-k (paper: top-15)."""
-    cand_vecs = points[best_id]  # (N, k2, d)
-    diff = points[:, None, :] - cand_vecs
+    cand_vecs = points[best_id_chunk]  # (C, k2, d)
+    rows = row_start + jnp.arange(best_id_chunk.shape[0], dtype=jnp.int32)
+    diff = points[rows][:, None, :] - cand_vecs
     d2 = jnp.sum(diff * diff, axis=-1)
-    d2 = jnp.where(best_id < 0, jnp.inf, d2)
-    self_mask = best_id == jnp.arange(points.shape[0], dtype=jnp.int32)[:, None]
-    d2 = jnp.where(self_mask, jnp.inf, d2)
+    d2 = jnp.where(best_id_chunk < 0, jnp.inf, d2)
+    d2 = jnp.where(best_id_chunk == rows[:, None], jnp.inf, d2)
     neg, idx = lax.top_k(-d2, k)
-    return jnp.take_along_axis(best_id, idx, axis=1), -neg
+    return jnp.take_along_axis(best_id_chunk, idx, axis=1), -neg
+
+
+def knn_graph_from_sketches(
+    points: jax.Array,
+    sketches: jax.Array,
+    params: GraphParams,
+    *,
+    bits: int,
+    key_bits: int,
+    lo: jax.Array,
+    hi: jax.Array,
+    chunk: int = 1 << 16,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full Algorithm-2 pipeline over pre-computed sketches (pure function).
+
+    ``sketches`` must be in point-id order (row i = point i).  Both the
+    facade (which reuses the index's fitted sketches) and the legacy shim
+    (which fits its own) funnel through here, so results are bit-identical.
+    """
+    n, d = points.shape
+    rng = np.random.default_rng(params.seed)
+    best_id = jnp.full((n, params.k2), -1, jnp.int32)
+    best_dist = jnp.full((n, params.k2), _INF, jnp.int32)
+    for _ in range(params.n_orders):
+        perm = jnp.asarray(rng.permutation(d).astype(np.int32))
+        flip = jnp.asarray(rng.integers(0, 2, d).astype(bool))
+        order, rank = order_and_rank(
+            points, lo, hi, perm, flip, bits=bits, key_bits=key_bits
+        )
+        best_id, best_dist = merge_order(
+            best_id, best_dist, order, rank, sketches, k1=params.k1, k2=params.k2
+        )
+    # Final exact selection, chunked over points to bound the (N, k2, d)
+    # gather transient.
+    ids_out, d_out = [], []
+    for s in range(0, n, chunk):
+        ids_c, d_c = final_select_chunk(
+            points, best_id[s : s + chunk], s, k=params.k
+        )
+        ids_out.append(ids_c)
+        d_out.append(d_c)
+    return jnp.concatenate(ids_out), jnp.concatenate(d_out)
 
 
 def build_knn_graph(
@@ -88,46 +139,25 @@ def build_knn_graph(
     forest_cfg: ForestConfig = ForestConfig(),
     chunk: int = 1 << 16,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (neighbor ids (N, k), squared distances (N, k))."""
-    n, d = points.shape
+    """DEPRECATED: use ``repro.index.HilbertIndex.build(...).knn_graph(...)``.
+
+    Re-fits a quantizer/sketches from scratch on every call; the facade
+    reuses the ones already fitted at index build time.
+    """
+    warnings.warn(
+        "repro.core.knn_graph.build_knn_graph is deprecated; use "
+        "repro.index.HilbertIndex.knn_graph(params), which reuses the "
+        "index's fitted quantizer/sketches",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     quant = quantize.fit(points, bits=quant_cfg.bits, sample_limit=quant_cfg.sample_limit)
     codes = quantize.encode(quant, points)
     sketches = sketch.sketches_from_codes(codes, bits=quant_cfg.bits)
     lo = jnp.min(points, axis=0)
     hi = jnp.max(points, axis=0)
-
-    rng = np.random.default_rng(params.seed)
-    best_id = jnp.full((n, params.k2), -1, jnp.int32)
-    best_dist = jnp.full((n, params.k2), _INF, jnp.int32)
-    for _ in range(params.n_orders):
-        perm = jnp.asarray(rng.permutation(d).astype(np.int32))
-        flip = jnp.asarray(rng.integers(0, 2, d).astype(bool))
-        order, rank = _order_and_rank(
-            points, lo, hi, perm, flip,
-            bits=forest_cfg.bits, key_bits=forest_cfg.key_bits,
-        )
-        best_id, best_dist = _merge_order(
-            best_id, best_dist, order, rank, sketches, k1=params.k1, k2=params.k2
-        )
-    # Final exact selection, chunked over points to bound the (N, k2, d)
-    # gather transient.
-    ids_out, d_out = [], []
-    for s in range(0, n, chunk):
-        ids_c, d_c = _final_select_chunk(
-            points, best_id[s : s + chunk], s, k=params.k
-        )
-        ids_out.append(ids_c)
-        d_out.append(d_c)
-    return jnp.concatenate(ids_out), jnp.concatenate(d_out)
-
-
-@functools.partial(jax.jit, static_argnames=("k",))
-def _final_select_chunk(points, best_id_chunk, row_start, *, k):
-    cand_vecs = points[best_id_chunk]  # (C, k2, d)
-    rows = row_start + jnp.arange(best_id_chunk.shape[0], dtype=jnp.int32)
-    diff = points[rows][:, None, :] - cand_vecs
-    d2 = jnp.sum(diff * diff, axis=-1)
-    d2 = jnp.where(best_id_chunk < 0, jnp.inf, d2)
-    d2 = jnp.where(best_id_chunk == rows[:, None], jnp.inf, d2)
-    neg, idx = lax.top_k(-d2, k)
-    return jnp.take_along_axis(best_id_chunk, idx, axis=1), -neg
+    return knn_graph_from_sketches(
+        points, sketches, params,
+        bits=forest_cfg.bits, key_bits=forest_cfg.key_bits, lo=lo, hi=hi,
+        chunk=chunk,
+    )

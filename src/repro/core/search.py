@@ -1,4 +1,12 @@
-"""Algorithm 1: approximate k-NN search with a Hilbert forest.
+"""Algorithm 1 jitted stages: approximate k-NN search with a Hilbert forest.
+
+.. note::
+   The public entry point is :class:`repro.index.HilbertIndex` — a
+   self-describing facade that carries its build config, so search never
+   takes a config argument.  This module now holds the **pure jitted
+   stages** the facade composes, plus thin deprecation shims
+   (:func:`build_index` / :func:`search`) for one release of backward
+   compatibility.
 
 Pipeline (paper §3.1): forest candidates (coarse) → Hamming filter on shared
 sketches (fine) → master-order ±h expansion → asymmetric fp32-vs-4-bit
@@ -21,6 +29,7 @@ Implementation notes vs the pseudocode:
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Tuple
 
 import jax
@@ -32,12 +41,25 @@ from repro.core import forest as forest_lib
 from repro.core import quantize, sketch
 from repro.core.types import ForestConfig, QuantizerConfig, SearchParams
 
-__all__ = ["HilbertForestIndex", "build_index", "search"]
+__all__ = [
+    "HilbertForestIndex",
+    "build_index",
+    "search",
+    "hilbert_master_sort",
+    "stage1_tree_merge",
+    "stage2_expand_rank",
+]
 
 _INF = jnp.int32(2**30)
 
 
 class HilbertForestIndex(NamedTuple):
+    """DEPRECATED legacy container — use :class:`repro.index.HilbertIndex`.
+
+    Carries no config, so callers of the legacy :func:`search` must re-supply
+    the exact build-time ``ForestConfig`` (the footgun the facade removes).
+    """
+
     forest: forest_lib.HilbertForest
     quant: quantize.Quantizer
     codes_master: jax.Array  # (n, d) uint8, master-order layout
@@ -64,36 +86,9 @@ class HilbertForestIndex(NamedTuple):
         }
 
 
-def build_index(
-    points: jax.Array,
-    forest_cfg: ForestConfig,
-    quant_cfg: QuantizerConfig = QuantizerConfig(),
-) -> HilbertForestIndex:
-    """Full Task-1 preprocessing: quantize, sketch, forest, master order."""
-    n, d = points.shape
-    quant = quantize.fit(points, bits=quant_cfg.bits, sample_limit=quant_cfg.sample_limit)
-    codes = quantize.encode(quant, points)
-    sketches = sketch.sketches_from_codes(codes, bits=quant_cfg.bits)
-
-    f = forest_lib.build_forest(points, forest_cfg)
-
-    # Master order: an un-permuted Hilbert sort; vectors/sketches rearranged.
-    master_order, _ = hilbert_master_sort(points, forest_cfg, f.lo, f.hi)
-    master_rank = jnp.zeros((n,), jnp.int32).at[master_order].set(
-        jnp.arange(n, dtype=jnp.int32)
-    )
-    return HilbertForestIndex(
-        forest=f,
-        quant=quant,
-        codes_master=codes[master_order],
-        sketches_master=sketches[master_order],
-        master_order=master_order,
-        master_rank=master_rank,
-    )
-
-
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def hilbert_master_sort(points, cfg: ForestConfig, lo, hi):
+    """Un-permuted Hilbert sort defining the master order (pure stage)."""
     from repro.core import hilbert
 
     return hilbert.hilbert_sort(
@@ -122,7 +117,7 @@ def _merge_topk_dedup(best_pos, best_dist, new_pos, new_dist, k: int):
     jax.jit, static_argnames=("bits", "key_bits", "leaf_size", "k1", "k2",
                               "use_kernels")
 )
-def _stage1_tree_merge(
+def stage1_tree_merge(
     queries,
     qsketches,
     best_pos,
@@ -143,6 +138,7 @@ def _stage1_tree_merge(
     k2,
     use_kernels=False,
 ):
+    """One tree's stage-1: candidates → Hamming filter → merge into top-k2."""
     cand_ids = forest_lib.tree_candidates(
         queries, order, directory, lo, hi, perm, flip,
         bits=bits, key_bits=key_bits, leaf_size=leaf_size, k1=k1,
@@ -159,7 +155,7 @@ def _stage1_tree_merge(
 
 
 @functools.partial(jax.jit, static_argnames=("h", "k"))
-def _stage2_expand_rank(
+def stage2_expand_rank(
     queries, best_pos, codes_master, master_order, quant, *, h, k
 ):
     """±h master-order expansion, dedup, exact ADC distance, final top-k."""
@@ -188,6 +184,40 @@ def _stage2_expand_rank(
     return master_order[final_pos], -neg
 
 
+# ---------------------------------------------------------------------------
+# Deprecation shims (one release): delegate to repro.index.HilbertIndex so
+# old callers get bit-identical results from the same jitted stages.
+# ---------------------------------------------------------------------------
+
+
+def build_index(
+    points: jax.Array,
+    forest_cfg: ForestConfig,
+    quant_cfg: QuantizerConfig = QuantizerConfig(),
+) -> HilbertForestIndex:
+    """DEPRECATED: use ``repro.index.HilbertIndex.build(points, cfg)``."""
+    warnings.warn(
+        "repro.core.search.build_index is deprecated; use "
+        "repro.index.HilbertIndex.build(points, IndexConfig(...))",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.index import HilbertIndex, IndexConfig
+
+    idx = HilbertIndex.build(
+        points,
+        IndexConfig(forest=forest_cfg, quantizer=quant_cfg, store_points=False),
+    )
+    return HilbertForestIndex(
+        forest=idx.forest,
+        quant=idx.quant,
+        codes_master=idx.codes_master,
+        sketches_master=idx.sketches_master,
+        master_order=idx.master_order,
+        master_rank=idx.master_rank,
+    )
+
+
 def search(
     index: HilbertForestIndex,
     queries: jax.Array,
@@ -196,43 +226,38 @@ def search(
     query_chunk: int = 2048,
     use_kernels: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Batched Algorithm-1 search. Returns (ids (Q, k), sq-distances).
+    """DEPRECATED: use ``repro.index.HilbertIndex.search(queries, params)``.
 
-    ``use_kernels=True`` routes the stage-2 Hamming filter through the
-    Pallas ``hamming_rows`` kernel (interpret-mode on CPU; compiled Mosaic
-    on TPU) — same results, asserted in tests/test_kernels_integration."""
-    outs_i, outs_d = [], []
-    qn = queries.shape[0]
-    for s in range(0, qn, query_chunk):
-        q = queries[s : s + query_chunk]
-        pad = 0
-        if q.shape[0] < query_chunk and qn > query_chunk:
-            pad = query_chunk - q.shape[0]
-            q = jnp.pad(q, ((0, pad), (0, 0)))
-        ids, dists = _search_chunk(index, q, params, forest_cfg, use_kernels)
-        if pad:
-            ids, dists = ids[:-pad], dists[:-pad]
-        outs_i.append(ids)
-        outs_d.append(dists)
-    return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
+    This legacy entry point requires re-supplying the build-time
+    ``forest_cfg``; a mismatch silently corrupts results.  The facade stores
+    the config on the index and removes the argument entirely.
+    """
+    warnings.warn(
+        "repro.core.search.search is deprecated; use "
+        "repro.index.HilbertIndex.search(queries, params) — the index "
+        "carries its own config",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.index import HilbertIndex, IndexConfig
 
-
-def _search_chunk(index, queries, params, forest_cfg, use_kernels=False):
-    f = index.forest
-    qn = queries.shape[0]
-    qsk = sketch.make_sketches(index.quant, queries)
-    best_pos = jnp.full((qn, params.k2), -1, jnp.int32)
-    best_dist = jnp.full((qn, params.k2), _INF, jnp.int32)
-    for t in range(f.n_trees):
-        best_pos, best_dist = _stage1_tree_merge(
-            queries, qsk, best_pos, best_dist,
-            f.orders[t], f.directories[t], f.lo, f.hi, f.perms[t], f.flips[t],
-            index.master_rank, index.sketches_master,
-            bits=forest_cfg.bits, key_bits=forest_cfg.key_bits,
-            leaf_size=forest_cfg.leaf_size, k1=params.k1, k2=params.k2,
-            use_kernels=use_kernels,
-        )
-    return _stage2_expand_rank(
-        queries, best_pos, index.codes_master, index.master_order, index.quant,
-        h=params.h, k=params.k,
+    idx = HilbertIndex(
+        config=IndexConfig(
+            forest=forest_cfg,
+            quantizer=QuantizerConfig(bits=index.quant.bits),
+            store_points=False,
+        ),
+        forest=index.forest,
+        quant=index.quant,
+        codes_master=index.codes_master,
+        sketches_master=index.sketches_master,
+        master_order=index.master_order,
+        master_rank=index.master_rank,
+        points=None,
+    )
+    return idx.search(
+        queries,
+        params,
+        backend="pallas" if use_kernels else "xla",
+        query_chunk=query_chunk,
     )

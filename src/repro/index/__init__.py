@@ -1,0 +1,43 @@
+"""Public API: the unified, self-describing Hilbert-forest index.
+
+    from repro.index import HilbertIndex, IndexConfig
+
+    index = HilbertIndex.build(points, IndexConfig())
+    ids, d2 = index.search(queries, SearchParams(k=30))   # Task 1
+    gids, gd2 = index.knn_graph(GraphParams(k=15))        # Task 2
+    index.save("ckpt/index"); index = HilbertIndex.load("ckpt/index")
+
+Legacy entry points (``repro.core.search.build_index/search`` and
+``repro.core.knn_graph.build_knn_graph``) are deprecation shims over this
+package for one release.
+"""
+
+from repro.core.types import (  # noqa: F401  (re-exported for one-stop import)
+    ForestConfig,
+    GraphParams,
+    QuantizerConfig,
+    SearchParams,
+)
+from repro.index.config import IndexConfig  # noqa: F401
+from repro.index.facade import (  # noqa: F401
+    BACKENDS,
+    HilbertIndex,
+    build_with_timings,
+    load_index_bundle,
+    resolve_backend,
+    save_index_bundle,
+)
+
+__all__ = [
+    "HilbertIndex",
+    "IndexConfig",
+    "ForestConfig",
+    "QuantizerConfig",
+    "SearchParams",
+    "GraphParams",
+    "BACKENDS",
+    "build_with_timings",
+    "resolve_backend",
+    "save_index_bundle",
+    "load_index_bundle",
+]

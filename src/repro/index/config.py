@@ -1,0 +1,57 @@
+"""IndexConfig: the single build-time configuration for :class:`HilbertIndex`.
+
+Composes the core ``ForestConfig`` / ``QuantizerConfig`` dataclasses into one
+frozen (hashable — usable as jit static aux data) object that the index
+carries for its whole life, including across ``save()``/``load()``.  The
+dict round-trip below is what lands in the checkpoint manifest, so a loaded
+index is self-describing: no caller ever re-supplies the build config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+from repro.core.types import ForestConfig, QuantizerConfig
+
+__all__ = ["IndexConfig"]
+
+
+def _filter_fields(cls, d: Dict[str, Any]) -> Dict[str, Any]:
+    """Keep only known dataclass fields (forward-compatible manifests)."""
+    names = {f.name for f in dataclasses.fields(cls)}
+    return {k: v for k, v in d.items() if k in names}
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Everything needed to (re)build or interpret a :class:`HilbertIndex`.
+
+    Attributes:
+      forest: Hilbert-forest shape (trees, curve bits, key width, leaf size).
+      quantizer: 4-bit shared-MSB quantizer settings.
+      store_points: keep the raw fp32 points on the index.  Required for
+        ``knn_graph()`` (Task-2 exact re-ranking); turn off for serving
+        deployments where only Algorithm-1 search runs and RAM matters.
+    """
+
+    forest: ForestConfig = ForestConfig()
+    quantizer: QuantizerConfig = QuantizerConfig()
+    store_points: bool = True
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "forest": dataclasses.asdict(self.forest),
+            "quantizer": dataclasses.asdict(self.quantizer),
+            "store_points": self.store_points,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "IndexConfig":
+        return cls(
+            forest=ForestConfig(**_filter_fields(ForestConfig, d.get("forest", {}))),
+            quantizer=QuantizerConfig(
+                **_filter_fields(QuantizerConfig, d.get("quantizer", {}))
+            ),
+            store_points=bool(d.get("store_points", True)),
+        )

@@ -1,0 +1,407 @@
+"""HilbertIndex: the unified, self-describing Hilbert-forest index.
+
+One artifact, three uses (paper: SISAP 2025 Tasks 1/2 + serving):
+
+* ``HilbertIndex.build(points, cfg)`` — Task-1 preprocessing (quantizer,
+  sketches, forest, master order) behind one call.
+* ``.search(queries, params)`` — Algorithm-1 ANN search.  The index carries
+  its build-time :class:`IndexConfig`, so no config argument exists to
+  mismatch (the legacy API's silent-corruption footgun).
+* ``.knn_graph(params)`` — Algorithm-2 graph construction **reusing** the
+  already-fit quantizer/codes/sketches instead of re-fitting.
+* ``.save(path)`` / ``HilbertIndex.load(path)`` — atomic persistence on the
+  ``repro.checkpoint`` machinery; build once, load in many serving workers.
+
+The class is a registered JAX pytree (arrays are children, the config is
+static aux data), so an index can be passed through ``jax.jit``/``tree_map``
+or device_put like any array bundle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.core import forest as forest_lib
+from repro.core import knn_graph as knn_graph_lib
+from repro.core import quantize, sketch
+from repro.core import search as search_lib
+from repro.core.types import GraphParams, SearchParams
+from repro.index.config import IndexConfig
+
+__all__ = [
+    "HilbertIndex",
+    "build_with_timings",
+    "resolve_backend",
+    "save_index_bundle",
+    "load_index_bundle",
+]
+
+_INF = jnp.int32(2**30)
+
+BACKENDS = ("auto", "xla", "pallas")
+
+# Leaf dtypes of the serialized array bundle (manifest-independent, so load
+# never trusts dtypes from disk beyond a cast to these).
+_LEAF_DTYPES = {
+    "forest.perms": jnp.int32,
+    "forest.flips": jnp.bool_,
+    "forest.orders": jnp.int32,
+    "forest.directories": jnp.uint32,
+    "forest.lo": jnp.float32,
+    "forest.hi": jnp.float32,
+    "quant.boundaries": jnp.float32,
+    "quant.centroids": jnp.float32,
+    "codes_master": jnp.uint8,
+    "sketches_master": jnp.uint32,
+    "master_order": jnp.int32,
+    "master_rank": jnp.int32,
+    "points": jnp.float32,
+}
+
+
+def resolve_backend(backend: str) -> str:
+    """Kernel-routing policy: 'auto' → Pallas on TPU, XLA elsewhere."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class HilbertIndex:
+    """Self-describing Hilbert-forest index (config travels with the arrays)."""
+
+    config: IndexConfig
+    forest: forest_lib.HilbertForest
+    quant: quantize.Quantizer
+    codes_master: jax.Array  # (n, d) uint8, master-order layout
+    sketches_master: jax.Array  # (n, Ws) uint32, master-order layout
+    master_order: jax.Array  # (n,) int32: position -> point id
+    master_rank: jax.Array  # (n,) int32: point id -> position
+    points: Optional[jax.Array] = None  # (n, d) fp32 iff config.store_points
+
+    # -- pytree protocol (config is static; arrays are children) ------------
+
+    def tree_flatten(self):
+        children = (
+            self.forest,
+            self.quant,
+            self.codes_master,
+            self.sketches_master,
+            self.master_order,
+            self.master_rank,
+            self.points,
+        )
+        return children, self.config
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux, *children)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def n_points(self) -> int:
+        return self.master_order.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.codes_master.shape[1]
+
+    def memory_report(self) -> Dict[str, int]:
+        """Bytes by component, mirroring the paper's RAM budget table."""
+        d = self.dim
+        packed_codes = self.n_points * (-(-d // 8)) * 4  # 4-bit packed
+        sketches = int(np.prod(self.sketches_master.shape)) * 4
+        shared = self.n_points * (-(-d // 32)) * 4  # MSB plane counted once
+        rep = {
+            "forest_bytes": self.forest.memory_bytes(),
+            "sketch_bytes": sketches,
+            "quantized_bytes": packed_codes,
+            "shared_bit_savings": shared,
+            "combined_stage2_bytes": sketches + packed_codes - shared,
+            "points_bytes": 0 if self.points is None else self.n_points * d * 4,
+        }
+        rep["total_bytes"] = (
+            rep["forest_bytes"] + rep["combined_stage2_bytes"] + rep["points_bytes"]
+        )
+        return rep
+
+    # -- build ---------------------------------------------------------------
+
+    @classmethod
+    def build(cls, points: jax.Array, config: IndexConfig = IndexConfig()
+              ) -> "HilbertIndex":
+        """Full Task-1 preprocessing: quantize, sketch, forest, master order."""
+        index, _ = build_with_timings(points, config)
+        return index
+
+    # -- Task 1: Algorithm-1 search -----------------------------------------
+
+    def search(
+        self,
+        queries: jax.Array,
+        params: SearchParams = SearchParams(),
+        *,
+        backend: str = "auto",
+        query_chunk: int = 2048,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Batched Algorithm-1 search. Returns (ids (Q, k), sq-distances).
+
+        No config argument: the forest/quantizer settings used at build time
+        travel on ``self.config``.  ``backend`` routes the stage-1 Hamming
+        filter: ``"pallas"`` uses the Mosaic kernel (interpret-mode on CPU),
+        ``"xla"`` the jnp oracle, ``"auto"`` picks Pallas only on TPU.
+        """
+        use_kernels = resolve_backend(backend) == "pallas"
+        outs_i, outs_d = [], []
+        qn = queries.shape[0]
+        for s in range(0, qn, query_chunk):
+            q = queries[s : s + query_chunk]
+            pad = 0
+            if q.shape[0] < query_chunk and qn > query_chunk:
+                pad = query_chunk - q.shape[0]
+                q = jnp.pad(q, ((0, pad), (0, 0)))
+            ids, dists = self._search_chunk(q, params, use_kernels)
+            if pad:
+                ids, dists = ids[:-pad], dists[:-pad]
+            outs_i.append(ids)
+            outs_d.append(dists)
+        return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
+
+    def _search_chunk(self, queries, params: SearchParams, use_kernels: bool):
+        fcfg = self.config.forest
+        f = self.forest
+        qn = queries.shape[0]
+        qsk = sketch.make_sketches(self.quant, queries)
+        best_pos = jnp.full((qn, params.k2), -1, jnp.int32)
+        best_dist = jnp.full((qn, params.k2), _INF, jnp.int32)
+        for t in range(f.n_trees):
+            best_pos, best_dist = search_lib.stage1_tree_merge(
+                queries, qsk, best_pos, best_dist,
+                f.orders[t], f.directories[t], f.lo, f.hi, f.perms[t], f.flips[t],
+                self.master_rank, self.sketches_master,
+                bits=fcfg.bits, key_bits=fcfg.key_bits,
+                leaf_size=fcfg.leaf_size, k1=params.k1, k2=params.k2,
+                use_kernels=use_kernels,
+            )
+        return search_lib.stage2_expand_rank(
+            queries, best_pos, self.codes_master, self.master_order, self.quant,
+            h=params.h, k=params.k,
+        )
+
+    # -- Task 2: Algorithm-2 graph construction ------------------------------
+
+    def knn_graph(
+        self,
+        params: GraphParams = GraphParams(),
+        *,
+        chunk: int = 1 << 16,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Approximate k-NN graph over the indexed points (Task 2).
+
+        Reuses the index's fitted quantizer → sketches and bounds instead of
+        re-fitting from scratch (what the legacy ``build_knn_graph`` did).
+        Requires ``config.store_points=True`` (default): the final exact
+        re-ranking step needs the fp32 points.
+        """
+        if self.points is None:
+            raise ValueError(
+                "knn_graph() needs the raw points for exact re-ranking; this "
+                "index was built with IndexConfig(store_points=False)"
+            )
+        # Sketches in point-id order, recovered from the master-order copy:
+        # sketches_master[master_rank[i]] is point i's sketch.
+        sketches_ids = self.sketches_master[self.master_rank]
+        fcfg = self.config.forest
+        return knn_graph_lib.knn_graph_from_sketches(
+            self.points, sketches_ids, params,
+            bits=fcfg.bits, key_bits=fcfg.key_bits,
+            lo=self.forest.lo, hi=self.forest.hi, chunk=chunk,
+        )
+
+    # -- persistence ---------------------------------------------------------
+
+    def _array_bundle(self) -> Dict[str, jax.Array]:
+        d = {
+            "forest.perms": self.forest.perms,
+            "forest.flips": self.forest.flips,
+            "forest.orders": self.forest.orders,
+            "forest.directories": self.forest.directories,
+            "forest.lo": self.forest.lo,
+            "forest.hi": self.forest.hi,
+            "quant.boundaries": self.quant.boundaries,
+            "quant.centroids": self.quant.centroids,
+            "codes_master": self.codes_master,
+            "sketches_master": self.sketches_master,
+            "master_order": self.master_order,
+            "master_rank": self.master_rank,
+        }
+        if self.points is not None:
+            d["points"] = self.points
+        return d
+
+    def save(self, path: str) -> str:
+        """Atomically persist index arrays + config under ``path``.
+
+        Uses the ``repro.checkpoint`` machinery (tmp-dir + fsync + rename),
+        so a crash mid-save can never corrupt a previously saved index and
+        many serving workers can load concurrently.  Returns the final
+        checkpoint directory.
+        """
+        return save_index_bundle(self, path)
+
+    @classmethod
+    def load(cls, path: str) -> "HilbertIndex":
+        """Load an index saved with :meth:`save`; fully self-describing."""
+        index, _, _ = load_index_bundle(path)
+        return index
+
+
+def save_index_bundle(
+    index: HilbertIndex,
+    path: str,
+    *,
+    kind: str = "hilbert_index",
+    extra_arrays: Optional[Dict[str, jax.Array]] = None,
+    extra_meta: Optional[Dict] = None,
+) -> str:
+    """Persist an index plus optional sidecar arrays as ONE atomic bundle.
+
+    Wrappers that pair an index with companion data (e.g. the serving
+    ``RetrievalStore``'s values array) use this so a crash or concurrent
+    load can never observe the index and its sidecars out of sync.
+    """
+    bundle = dict(index._array_bundle())
+    for k, v in (extra_arrays or {}).items():
+        if k in _LEAF_DTYPES:
+            raise ValueError(f"extra array name {k!r} collides with an index leaf")
+        bundle[k] = v
+    extra = {
+        "kind": kind,
+        "format_version": 1,
+        "config": index.config.to_dict(),
+        "has_points": index.points is not None,
+        "n_points": int(index.n_points),
+        "dim": int(index.dim),
+        "extra_arrays": sorted((extra_arrays or {}).keys()),
+    }
+    for k in extra_meta or {}:
+        if k in extra:
+            raise ValueError(f"extra_meta key {k!r} collides with a reserved key")
+    extra.update(extra_meta or {})
+    return checkpoint.save(path, step=0, tree=bundle, extra=extra)
+
+
+def load_index_bundle(
+    path: str, *, kind: str = "hilbert_index"
+) -> Tuple[HilbertIndex, Dict[str, jax.Array], Dict]:
+    """Inverse of :func:`save_index_bundle`.
+
+    Returns ``(index, extra_arrays, manifest_extra)``; sidecar array dtypes
+    come from the manifest, index leaf dtypes from the static schema.
+    """
+    step = checkpoint.latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no HilbertIndex checkpoint under {path!r}")
+    with open(os.path.join(path, f"step_{step:08d}", "manifest.json")) as f:
+        manifest = json.load(f)
+    extra = manifest.get("extra", {})
+    if extra.get("kind") != kind:
+        raise ValueError(
+            f"{path!r} is not a HilbertIndex checkpoint of kind {kind!r} "
+            f"(kind={extra.get('kind')!r})"
+        )
+    config = IndexConfig.from_dict(extra["config"])
+    names = list(_LEAF_DTYPES)
+    if not extra.get("has_points", False):
+        names.remove("points")
+    abstract = {k: jax.ShapeDtypeStruct((0,), _LEAF_DTYPES[k]) for k in names}
+    extra_names = extra.get("extra_arrays", [])
+    for k in extra_names:
+        # manifest leaves are keyed by jax keystr: "['<name>']"
+        _, dtype_str = manifest["leaves"][f"['{k}']"]
+        abstract[k] = jax.ShapeDtypeStruct((0,), np.dtype(dtype_str))
+    arrays, _ = checkpoint.restore(path, step, abstract)
+    index = HilbertIndex(
+        config=config,
+        forest=forest_lib.HilbertForest(
+            perms=arrays["forest.perms"],
+            flips=arrays["forest.flips"],
+            orders=arrays["forest.orders"],
+            directories=arrays["forest.directories"],
+            lo=arrays["forest.lo"],
+            hi=arrays["forest.hi"],
+        ),
+        quant=quantize.Quantizer(
+            boundaries=arrays["quant.boundaries"],
+            centroids=arrays["quant.centroids"],
+        ),
+        codes_master=arrays["codes_master"],
+        sketches_master=arrays["sketches_master"],
+        master_order=arrays["master_order"],
+        master_rank=arrays["master_rank"],
+        points=arrays.get("points"),
+    )
+    return index, {k: arrays[k] for k in extra_names}, extra
+
+
+def build_with_timings(
+    points: jax.Array, config: IndexConfig = IndexConfig()
+) -> Tuple[HilbertIndex, Dict[str, float]]:
+    """Build an index and return per-phase wall times (paper §3.2 split).
+
+    Phases: ``quantization`` (fit+encode), ``sketches``, ``forest`` (the
+    dominant cost — n_trees Hilbert sorts), ``master_sort``.
+    """
+    n, _ = points.shape
+    qcfg, fcfg = config.quantizer, config.forest
+    timings: Dict[str, float] = {}
+
+    t0 = time.time()
+    quant = quantize.fit(points, bits=qcfg.bits, sample_limit=qcfg.sample_limit)
+    codes = quantize.encode(quant, points)
+    jax.block_until_ready(codes)
+    timings["quantization"] = time.time() - t0
+
+    t0 = time.time()
+    sketches = sketch.sketches_from_codes(codes, bits=qcfg.bits)
+    jax.block_until_ready(sketches)
+    timings["sketches"] = time.time() - t0
+
+    t0 = time.time()
+    f = forest_lib.build_forest(points, fcfg)
+    jax.block_until_ready(f.orders)
+    timings["forest"] = time.time() - t0
+
+    # Master order: an un-permuted Hilbert sort; vectors/sketches rearranged.
+    t0 = time.time()
+    master_order, _ = search_lib.hilbert_master_sort(points, fcfg, f.lo, f.hi)
+    master_rank = jnp.zeros((n,), jnp.int32).at[master_order].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    jax.block_until_ready(master_order)
+    timings["master_sort"] = time.time() - t0
+
+    index = HilbertIndex(
+        config=config,
+        forest=f,
+        quant=quant,
+        codes_master=codes[master_order],
+        sketches_master=sketches[master_order],
+        master_order=master_order,
+        master_rank=master_rank,
+        points=points if config.store_points else None,
+    )
+    return index, timings

@@ -1,0 +1,1 @@
+"""Entry-point drivers: train, serve, dry-run, multihost, roofline."""

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro import configs
 from repro.core.types import ForestConfig, SearchParams
+from repro.index import IndexConfig
 from repro.models import model
 from repro.serve.retrieval import RetrievalStore, knn_lm_mix
 from repro.sharding import ShardingRules
@@ -70,7 +71,8 @@ def main() -> None:
         vals = corpus[:, 1:].reshape(-1)
         fc = ForestConfig(n_trees=8, bits=4, key_bits=min(256, cfg.d_model * 4),
                           leaf_size=32)
-        store = RetrievalStore.build(keys, vals, fc)
+        store = RetrievalStore.build(
+            keys, vals, IndexConfig(forest=fc, store_points=False))
         print(f"[retrieval] datastore: {keys.shape[0]} entries")
 
     t0 = time.time()

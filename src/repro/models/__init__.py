@@ -1,0 +1,1 @@
+"""Model zoo: decoder/enc-dec transformer configs + forward/decode paths."""

@@ -8,37 +8,71 @@ model's softmax (Khandelwal et al., 2020):
 
     p(w) = (1-λ)·p_model(w) + λ·p_knn(w),
     p_knn ∝ Σ_{(h_i,w_i) ∈ kNN} 1[w_i=w]·exp(-d(h, h_i)/T)
+
+The store is just a :class:`repro.index.HilbertIndex` plus a values array —
+the index carries its own config, so ``save()``/``load()`` lets one build
+job feed many serving workers.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import search
 from repro.core.types import ForestConfig, SearchParams
+from repro.index import (
+    HilbertIndex,
+    IndexConfig,
+    load_index_bundle,
+    save_index_bundle,
+)
 
 
 @dataclasses.dataclass
 class RetrievalStore:
-    index: search.HilbertForestIndex
-    forest_cfg: ForestConfig
+    index: HilbertIndex
     values: jax.Array          # (n,) int32 next-token per datastore entry
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array,
-              forest_cfg: ForestConfig) -> "RetrievalStore":
-        """keys: (n, d) hidden states; values: (n,) next tokens."""
-        idx = search.build_index(keys, forest_cfg)
-        return cls(index=idx, forest_cfg=forest_cfg, values=values)
+              config: Union[IndexConfig, ForestConfig, None] = None
+              ) -> "RetrievalStore":
+        """keys: (n, d) hidden states; values: (n,) next tokens.
+
+        ``config`` may be a full :class:`IndexConfig` or (for one release of
+        backward compatibility) a bare ``ForestConfig``.  Serving only runs
+        Algorithm-1 search, so raw points are not retained.
+        """
+        if config is None:
+            config = IndexConfig(store_points=False)
+        elif isinstance(config, ForestConfig):
+            config = IndexConfig(forest=config, store_points=False)
+        idx = HilbertIndex.build(keys, config)
+        return cls(index=idx, values=values)
 
     def lookup(self, queries: jax.Array, params: SearchParams
                ) -> Tuple[jax.Array, jax.Array]:
         """(Q, d) hidden states -> (ids (Q,k), sq-dists (Q,k))."""
-        return search.search(self.index, queries, params, self.forest_cfg)
+        return self.index.search(queries, params)
+
+    def save(self, path: str) -> str:
+        """Persist index + values as ONE atomic checkpoint bundle.
+
+        A crash mid-save or a concurrent :meth:`load` in another worker can
+        never observe the index and its values array out of sync.
+        """
+        return save_index_bundle(
+            self.index, path, kind="retrieval_store",
+            extra_arrays={"values": self.values},
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "RetrievalStore":
+        index, extras, _ = load_index_bundle(path, kind="retrieval_store")
+        return cls(index=index, values=extras["values"])
 
 
 def knn_lm_mix(

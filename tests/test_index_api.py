@@ -1,0 +1,202 @@
+"""Tests for the unified, self-describing ``repro.index.HilbertIndex`` API.
+
+Covers the facade's contract: config travels with the index (no config
+argument at search time — the legacy mismatch footgun is structurally
+gone), save/load reproduces search bit-exactly, deprecation shims warn yet
+match the facade exactly, and the index behaves as a JAX pytree.
+"""
+
+import inspect
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import knn_graph as legacy_knn_graph
+from repro.core import search as legacy_search
+from repro.data import ann_datasets
+from repro.index import (
+    ForestConfig,
+    GraphParams,
+    HilbertIndex,
+    IndexConfig,
+    SearchParams,
+    resolve_backend,
+)
+
+N, D, Q = 3000, 64, 32
+
+CFG = IndexConfig(
+    forest=ForestConfig(n_trees=4, bits=4, key_bits=256, leaf_size=16, seed=0)
+)
+SP = SearchParams(k1=16, k2=64, h=1, k=10)
+GP = GraphParams(n_orders=4, k1=16, k2=32, k=8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    data, queries = ann_datasets.lowrank_dataset_with_queries(
+        N, Q, D, n_clusters=8, seed=0
+    )
+    return jnp.asarray(data), jnp.asarray(queries)
+
+
+@pytest.fixture(scope="module")
+def index(dataset):
+    data, _ = dataset
+    return HilbertIndex.build(data, CFG)
+
+
+def test_search_returns_valid_topk(dataset, index):
+    _, queries = dataset
+    ids, d2 = index.search(queries, SP)
+    ids, d2 = np.asarray(ids), np.asarray(d2)
+    assert ids.shape == (Q, SP.k) and d2.shape == (Q, SP.k)
+    assert ((ids >= 0) & (ids < N)).all()
+    assert np.all(np.diff(d2, axis=1) >= -1e-5)  # sorted ascending
+    for row in ids:
+        assert len(set(row.tolist())) == len(row)  # deduped
+
+
+def test_index_is_self_describing_no_config_at_search(dataset, index):
+    """Regression: a mismatched config can no longer be injected at search.
+
+    The legacy ``search(index, queries, params, forest_cfg)`` let callers
+    pass a ForestConfig that disagreed with build time, silently corrupting
+    results.  The facade has no such parameter at all.
+    """
+    _, queries = dataset
+    sig = inspect.signature(HilbertIndex.search)
+    assert "forest_cfg" not in sig.parameters
+    assert "cfg" not in sig.parameters
+    wrong_cfg = ForestConfig(n_trees=4, bits=2, key_bits=64, leaf_size=16)
+    with pytest.raises(TypeError):
+        index.search(queries, SP, wrong_cfg)  # no third positional exists
+    sig_g = inspect.signature(HilbertIndex.knn_graph)
+    assert "forest_cfg" not in sig_g.parameters
+    # and the carried config is the one from build time
+    assert index.config == CFG
+
+
+def test_save_load_roundtrip_bit_identical(tmp_path, dataset, index):
+    _, queries = dataset
+    ids, d2 = index.search(queries, SP)
+    index.save(str(tmp_path / "idx"))
+    loaded = HilbertIndex.load(str(tmp_path / "idx"))
+    assert loaded.config == index.config
+    ids2, d22 = loaded.search(queries, SP)
+    assert np.array_equal(np.asarray(ids), np.asarray(ids2))
+    assert np.array_equal(np.asarray(d2), np.asarray(d22))
+    # Task 2 off the loaded artifact is bit-identical too.
+    g1 = index.knn_graph(GP)
+    g2 = loaded.knn_graph(GP)
+    assert np.array_equal(np.asarray(g1[0]), np.asarray(g2[0]))
+    assert np.array_equal(np.asarray(g1[1]), np.asarray(g2[1]))
+
+
+def test_load_rejects_non_index_checkpoint(tmp_path):
+    from repro import checkpoint
+
+    checkpoint.save(str(tmp_path / "w"), 0, {"w": np.zeros(3)}, extra={})
+    with pytest.raises(ValueError, match="not a HilbertIndex"):
+        HilbertIndex.load(str(tmp_path / "w"))
+    with pytest.raises(FileNotFoundError):
+        HilbertIndex.load(str(tmp_path / "missing"))
+
+
+def test_legacy_search_shim_warns_and_matches(dataset, index):
+    data, queries = dataset
+    with pytest.warns(DeprecationWarning):
+        legacy_idx = legacy_search.build_index(data, CFG.forest)
+    with pytest.warns(DeprecationWarning):
+        lids, ld2 = legacy_search.search(legacy_idx, queries, SP, CFG.forest)
+    ids, d2 = index.search(queries, SP)
+    assert np.array_equal(np.asarray(ids), np.asarray(lids))
+    assert np.array_equal(np.asarray(d2), np.asarray(ld2))
+
+
+def test_legacy_knn_graph_shim_warns_and_matches(dataset, index):
+    data, _ = dataset
+    with pytest.warns(DeprecationWarning):
+        lids, ld2 = legacy_knn_graph.build_knn_graph(
+            data, GP, forest_cfg=CFG.forest
+        )
+    ids, d2 = index.knn_graph(GP)
+    assert np.array_equal(np.asarray(ids), np.asarray(lids))
+    assert np.array_equal(np.asarray(d2), np.asarray(ld2))
+
+
+def test_knn_graph_requires_stored_points(dataset):
+    data, _ = dataset
+    slim = HilbertIndex.build(
+        data, IndexConfig(forest=CFG.forest, store_points=False)
+    )
+    assert slim.points is None
+    with pytest.raises(ValueError, match="store_points"):
+        slim.knn_graph(GP)
+    # search is unaffected by dropping the raw points
+    _, queries = dataset
+    ids, _ = slim.search(queries, SP)
+    assert np.asarray(ids).shape == (Q, SP.k)
+
+
+def test_backend_routing(dataset, index):
+    _, queries = dataset
+    with pytest.raises(ValueError, match="backend"):
+        index.search(queries, SP, backend="cuda")
+    assert resolve_backend("xla") == "xla"
+    assert resolve_backend("pallas") == "pallas"
+    assert resolve_backend("auto") in ("xla", "pallas")
+    # explicit xla and auto agree on CPU test hosts
+    ids_auto, _ = index.search(queries, SP, backend="auto")
+    ids_xla, _ = index.search(queries, SP, backend="xla")
+    if jax.default_backend() != "tpu":
+        assert np.array_equal(np.asarray(ids_auto), np.asarray(ids_xla))
+
+
+def test_index_is_a_pytree(index):
+    leaves = jax.tree_util.tree_leaves(index)
+    assert len(leaves) >= 12  # forest(6) + quant(2) + 4 master arrays + points
+    mapped = jax.tree_util.tree_map(lambda x: x, index)
+    assert isinstance(mapped, HilbertIndex)
+    assert mapped.config == index.config  # config is static aux data
+    assert np.array_equal(
+        np.asarray(mapped.master_order), np.asarray(index.master_order)
+    )
+
+
+def test_memory_report(index):
+    rep = index.memory_report()
+    assert rep["combined_stage2_bytes"] < rep["sketch_bytes"] + rep["quantized_bytes"]
+    assert rep["forest_bytes"] > 0
+    assert rep["points_bytes"] == N * D * 4
+    assert rep["total_bytes"] >= rep["forest_bytes"] + rep["combined_stage2_bytes"]
+
+
+def test_config_dict_roundtrip():
+    d = CFG.to_dict()
+    assert IndexConfig.from_dict(d) == CFG
+    # forward-compat: unknown keys ignored
+    d["forest"]["future_field"] = 123
+    d["unknown"] = "x"
+    assert IndexConfig.from_dict(d) == CFG
+
+
+def test_retrieval_store_on_facade(tmp_path, dataset):
+    from repro.serve.retrieval import RetrievalStore
+
+    data, queries = dataset
+    values = jnp.arange(N, dtype=jnp.int32) % 97
+    store = RetrievalStore.build(
+        data, values, IndexConfig(forest=CFG.forest, store_points=False)
+    )
+    ids, d2 = store.lookup(queries, SP)
+    assert np.asarray(ids).shape == (Q, SP.k)
+    store.save(str(tmp_path / "store"))
+    loaded = RetrievalStore.load(str(tmp_path / "store"))
+    ids2, d22 = loaded.lookup(queries, SP)
+    assert np.array_equal(np.asarray(ids), np.asarray(ids2))
+    assert np.array_equal(np.asarray(d2), np.asarray(d22))
+    assert np.array_equal(np.asarray(loaded.values), np.asarray(values))

@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st  # guarded dev-only import
 
 from repro.core import quantize
 from repro.kernels.hamming import hamming_matrix, hamming_matrix_ref

@@ -3,8 +3,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st  # guarded dev-only import
 
 from repro.optim import OptimizerConfig, apply_updates, init_opt_state, lr_at
 

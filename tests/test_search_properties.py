@@ -2,8 +2,8 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st  # guarded dev-only import
 
 from repro.core import hilbert, search
 from repro.core.types import ForestConfig, SearchParams
