@@ -8,6 +8,7 @@ API (build once → search / knn_graph off the same artifact).
   phases   — preprocessing time split (paper §3.2)
   kernels  — hamming/qdist microbench + TPU roofline model
   hsort    — Hilbert-sort scaling (2016 algorithm claim)
+  churn    — streaming insert/delete/search on the mutable index
 
 ``python -m benchmarks.run [names...]`` (default: all).
 """
@@ -17,7 +18,8 @@ import time
 
 
 def main() -> None:
-    names = sys.argv[1:] or ["kernels", "hsort", "phases", "table2", "table1"]
+    names = sys.argv[1:] or ["kernels", "hsort", "phases", "table2", "table1",
+                             "churn"]
     t00 = time.time()
     for name in names:
         print(f"\n===== {name} =====", flush=True)
@@ -32,6 +34,8 @@ def main() -> None:
             from benchmarks import kernel_bench as m
         elif name == "hsort":
             from benchmarks import hilbert_sort_bench as m
+        elif name == "churn":
+            from benchmarks import churn as m
         else:
             raise SystemExit(f"unknown benchmark {name!r}")
         m.main()

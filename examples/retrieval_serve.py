@@ -85,4 +85,17 @@ for use_retrieval in (False, True):
         tok = jnp.asarray(targets[:, t - 32][:, None])  # teacher forcing
     tag = "kNN-LM " if use_retrieval else "model  "
     print(f"[{tag}] next-token acc over 8 steps: {correct}/{total}")
+
+# --- the datastore grows WHILE serving (no rebuild): stream one more batch ---
+b = pipe.jax_batch(300)
+hid, _, _ = model.forward(cfg, params, b["tokens"], rules, return_hidden=True)
+new_keys = jnp.asarray(hid[:, :-1].reshape(-1, cfg.d_model), jnp.float32)
+new_vals = jnp.asarray(b["tokens"][:, 1:].reshape(-1))
+t0 = time.time()
+new_ids = store.append(new_keys, new_vals)
+print(f"[append ] +{len(new_ids):,} entries in {time.time()-t0:.2f}s -> "
+      f"{store.index.n_live:,} live ({store.index.n_segments} segments, "
+      f"{store.index.n_buffered} buffered)")
+store.delete(new_ids[: len(new_ids) // 2])   # and shrinks: TTL-style eviction
+print(f"[delete ] evicted {len(new_ids)//2:,} -> {store.index.n_live:,} live")
 print("done.")

@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     AsyncCheckpointer,
+    atomic_write_json,
     latest_step,
     restore,
     save,

@@ -65,6 +65,21 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> s
     return final
 
 
+def atomic_write_json(path: str, obj: Any) -> str:
+    """Write JSON via tmp + fsync + rename — the commit point for saves that
+    span several checkpoint bundles (e.g. a multi-segment mutable index):
+    write every bundle first, then this manifest; a crash in between leaves
+    the previous manifest (and whatever bundles it references) intact.
+    """
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     """Largest fully-written step (ignores .tmp partials)."""
     if not os.path.isdir(ckpt_dir):

@@ -48,6 +48,7 @@ __all__ = [
     "hilbert_master_sort",
     "stage1_tree_merge",
     "stage2_expand_rank",
+    "brute_force_topk",
 ]
 
 _INF = jnp.int32(2**30)
@@ -182,6 +183,25 @@ def stage2_expand_rank(
     neg, idx = lax.top_k(-d2, k)
     final_pos = jnp.take_along_axis(pos_s, idx, axis=1)
     return master_order[final_pos], -neg
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def brute_force_topk(queries, points, valid, *, k):
+    """Exact squared-L2 top-k against a small point set (pure stage).
+
+    The mutable index's write buffer is searched this way: ``points`` is the
+    fixed-capacity buffer (so the jit cache is stable across fills) and
+    ``valid`` masks dead / unfilled rows to +inf.  Uses the Gram expansion
+    ||q-p||^2 = ||q||^2 - 2<q,p> + ||p||^2 so the transient is (Q, B), not
+    (Q, B, d).  Returns (row indices into ``points`` (Q, k), d2 (Q, k));
+    masked rows surface as d2 = +inf.
+    """
+    qq = jnp.sum(queries * queries, axis=1)[:, None]
+    pp = jnp.sum(points * points, axis=1)[None, :]
+    d2 = jnp.maximum(qq - 2.0 * (queries @ points.T) + pp, 0.0)
+    d2 = jnp.where(valid[None, :], d2, jnp.inf)
+    neg, idx = lax.top_k(-d2, k)
+    return idx, -neg
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,17 @@
     gids, gd2 = index.knn_graph(GraphParams(k=15))        # Task 2
     index.save("ckpt/index"); index = HilbertIndex.load("ckpt/index")
 
+For workloads that must absorb inserts and deletions while serving, use the
+LSM-style streaming wrapper :class:`repro.index.MutableHilbertIndex`
+(:mod:`repro.index.mutable`): a write buffer searched exactly, sealed
+immutable :class:`HilbertIndex` segments, tombstoned deletes, and tiered
+compaction riding the paper's fast Hilbert-sort build path::
+
+    mut = MutableHilbertIndex(IndexConfig())
+    ids = mut.insert(points); mut.delete(ids[:5])
+    hits, d2 = mut.search(queries, SearchParams(k=30))
+    mut.compact()                       # merge segments, drop tombstones
+
 Legacy entry points (``repro.core.search.build_index/search`` and
 ``repro.core.knn_graph.build_knn_graph``) are deprecation shims over this
 package for one release.
@@ -27,9 +38,17 @@ from repro.index.facade import (  # noqa: F401
     resolve_backend,
     save_index_bundle,
 )
+from repro.index.mutable import (  # noqa: F401
+    MutableHilbertIndex,
+    Segment,
+    load_mutable_bundle,
+    save_mutable_bundle,
+)
 
 __all__ = [
     "HilbertIndex",
+    "MutableHilbertIndex",
+    "Segment",
     "IndexConfig",
     "ForestConfig",
     "QuantizerConfig",
@@ -40,4 +59,6 @@ __all__ = [
     "resolve_backend",
     "save_index_bundle",
     "load_index_bundle",
+    "save_mutable_bundle",
+    "load_mutable_bundle",
 ]

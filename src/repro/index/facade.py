@@ -120,11 +120,23 @@ class HilbertIndex:
         return self.codes_master.shape[1]
 
     def memory_report(self) -> Dict[str, int]:
-        """Bytes by component, mirroring the paper's RAM budget table."""
+        """Bytes by component: the paper's RAM-budget model plus actuals.
+
+        ``quantized_bytes``/``combined_stage2_bytes`` follow the paper's
+        4-bit-packed accounting; ``codes_bytes``/``order_bytes``/
+        ``quant_bytes`` are the arrays actually resident (codes are stored
+        unpacked uint8 on this backend), and ``resident_bytes`` /
+        ``total_bytes`` sum every pytree leaf so segment lists and serving
+        deployments can budget real RAM.
+        """
         d = self.dim
         packed_codes = self.n_points * (-(-d // 8)) * 4  # 4-bit packed
         sketches = int(np.prod(self.sketches_master.shape)) * 4
         shared = self.n_points * (-(-d // 32)) * 4  # MSB plane counted once
+        resident = sum(
+            int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+            for leaf in jax.tree_util.tree_leaves(self)
+        )
         rep = {
             "forest_bytes": self.forest.memory_bytes(),
             "sketch_bytes": sketches,
@@ -132,18 +144,35 @@ class HilbertIndex:
             "shared_bit_savings": shared,
             "combined_stage2_bytes": sketches + packed_codes - shared,
             "points_bytes": 0 if self.points is None else self.n_points * d * 4,
+            "codes_bytes": int(np.prod(self.codes_master.shape)),  # uint8
+            "order_bytes": self.master_order.nbytes + self.master_rank.nbytes,
+            "quant_bytes": self.quant.boundaries.nbytes
+            + self.quant.centroids.nbytes,
+            "resident_bytes": resident,
         }
-        rep["total_bytes"] = (
-            rep["forest_bytes"] + rep["combined_stage2_bytes"] + rep["points_bytes"]
-        )
+        rep["total_bytes"] = resident
         return rep
+
+    def __repr__(self) -> str:
+        mb = self.memory_report()["resident_bytes"] / 1e6
+        return (
+            f"HilbertIndex(n_points={self.n_points}, dim={self.dim}, "
+            f"n_trees={self.forest.n_trees}, "
+            f"store_points={self.points is not None}, "
+            f"backend={jax.default_backend()}, {mb:.2f} MB)"
+        )
 
     # -- build ---------------------------------------------------------------
 
     @classmethod
-    def build(cls, points: jax.Array, config: IndexConfig = IndexConfig()
+    def build(cls, points: jax.Array, config: Optional[IndexConfig] = None
               ) -> "HilbertIndex":
-        """Full Task-1 preprocessing: quantize, sketch, forest, master order."""
+        """Full Task-1 preprocessing: quantize, sketch, forest, master order.
+
+        ``config=None`` means ``IndexConfig()`` (a ``None`` sentinel, not a
+        default-argument instance, so no config object is ever shared
+        between calls).
+        """
         index, _ = build_with_timings(points, config)
         return index
 
@@ -358,13 +387,15 @@ def load_index_bundle(
 
 
 def build_with_timings(
-    points: jax.Array, config: IndexConfig = IndexConfig()
+    points: jax.Array, config: Optional[IndexConfig] = None
 ) -> Tuple[HilbertIndex, Dict[str, float]]:
     """Build an index and return per-phase wall times (paper §3.2 split).
 
     Phases: ``quantization`` (fit+encode), ``sketches``, ``forest`` (the
     dominant cost — n_trees Hilbert sorts), ``master_sort``.
     """
+    if config is None:
+        config = IndexConfig()
     n, _ = points.shape
     qcfg, fcfg = config.quantizer, config.forest
     timings: Dict[str, float] = {}

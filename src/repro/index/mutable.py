@@ -1,0 +1,768 @@
+"""MutableHilbertIndex: LSM-style streaming mutation on top of HilbertIndex.
+
+The paper's headline Task-2 result — Hilbert sort makes forest construction
+the *fastest* entry — is exactly the property that makes merge-based dynamic
+maintenance cheap: re-sorting a few hundred thousand points is milliseconds,
+so segments can be rebuilt wholesale instead of patched in place.  This
+module layers classic LSM machinery over the immutable facade:
+
+* **Write buffer** — a fixed-capacity in-RAM array of freshly inserted
+  points, searched exactly (:func:`repro.core.search.brute_force_topk`).
+  Fixed capacity keeps the jitted brute-force stage's shapes stable.
+* **Sealed segments** — when the buffer fills (or :meth:`flush` is called)
+  its live rows become an ordinary immutable :class:`HilbertIndex` built via
+  the existing fast path, plus an id-remap array giving each local row its
+  stable external id.
+* **Tombstones** — deletes only flip a bit in a dense ``alive`` mask; search
+  masks dead candidates during the cross-segment merge, and each segment's
+  per-query ``k`` is inflated by its dead count so tombstones cannot eat
+  result slots.
+* **Tiered compaction** — when segments pile up, the smallest two are merged
+  by concatenating their stored points, dropping tombstoned rows for good,
+  re-sorting (one cheap Hilbert-forest build), and remapping ids.
+  :meth:`compact` merges everything into one segment, after which search is
+  equivalent to a from-scratch :class:`HilbertIndex.build` over the
+  surviving points (segments keep rows in external-id order, i.e. insertion
+  order, so the rebuild sees the same point sequence).
+
+Search fans out over buffer + segments and merges per-source top-k into one
+exact top-k (the same associative merge argument as ``core/knn_graph.py``:
+the global top-k of a union is the top-k of per-source top-k's).  External
+ids are stable for the life of the index — they survive flushes and
+compactions — and rows never move between sources except through them.
+
+Persistence is a multi-bundle checkpoint: one ``repro.checkpoint`` bundle
+per segment, one for the buffer/tombstone/value state, committed by an
+atomically renamed top-level manifest (see
+:func:`repro.checkpoint.atomic_write_json`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.core import search as search_lib
+from repro.core.types import SearchParams
+from repro.index.config import IndexConfig
+from repro.index.facade import (
+    HilbertIndex,
+    load_index_bundle,
+    save_index_bundle,
+)
+
+__all__ = [
+    "MutableHilbertIndex",
+    "Segment",
+    "load_mutable_bundle",
+    "save_mutable_bundle",
+]
+
+_MANIFEST = "mutable_manifest.json"
+_SEGMENT_KIND = "mutable_segment"
+_DEFAULT_KIND = "mutable_hilbert_index"
+_MAX_IDS = 2**31 - 1  # external ids are int32
+
+
+@dataclasses.dataclass(eq=False)  # identity equality: segments hold arrays
+class Segment:
+    """One sealed immutable segment: an index plus its external-id remap.
+
+    ``ids[row] = external id`` of the row-th point handed to the segment's
+    build (ascending, because flush/compaction keep insertion order), so a
+    local search result maps to stable ids with one gather.
+    """
+
+    index: HilbertIndex
+    ids: np.ndarray  # (n,) int32, ascending external ids
+    gen: int  # monotone generation tag (stable on-disk segment name)
+    # dead-count cache: recomputed only when the owner's delete epoch moves.
+    dead_cache: int = dataclasses.field(default=-1, repr=False)
+    dead_epoch: int = dataclasses.field(default=-1, repr=False)
+
+    @property
+    def n_points(self) -> int:
+        return int(self.ids.shape[0])
+
+    def memory_bytes(self) -> int:
+        return self.index.memory_report()["resident_bytes"] + self.ids.nbytes
+
+    def content_uid(self) -> str:
+        """Content address for on-disk dedup: hashes ids + quantized codes.
+
+        Two segments with equal uids hold the same points under the same
+        external ids, so a save may safely skip rewriting a bundle that
+        already carries this uid — even if it was written by a different
+        index instance reusing the same checkpoint path.
+        """
+        h = hashlib.sha1()
+        h.update(np.int64(self.gen).tobytes())
+        h.update(np.asarray(self.ids.shape + self.index.codes_master.shape,
+                            np.int64).tobytes())
+        h.update(self.ids.tobytes())
+        h.update(np.asarray(self.index.codes_master).tobytes())
+        return h.hexdigest()
+
+
+class MutableHilbertIndex:
+    """Streaming insert/delete/search over an LSM of Hilbert-forest segments.
+
+    Typical lifecycle::
+
+        mut = MutableHilbertIndex(IndexConfig(), buffer_capacity=4096)
+        ids = mut.insert(points)          # stable external ids
+        mut.delete(ids[:10])              # tombstoned, invisible to search
+        hits, d2 = mut.search(queries, SearchParams(k=30))
+        mut.compact()                     # one segment, tombstones dropped
+        mut.save(path); mut = MutableHilbertIndex.load(path)
+
+    ``insert`` may carry per-point ``values`` (e.g. kNN-LM next tokens);
+    retrieve them for search hits with :meth:`values_at`.
+    """
+
+    def __init__(
+        self,
+        config: Optional[IndexConfig] = None,
+        *,
+        buffer_capacity: int = 4096,
+        max_segments: int = 8,
+    ):
+        if buffer_capacity < 1:
+            raise ValueError(f"buffer_capacity must be >= 1, got {buffer_capacity}")
+        if max_segments < 1:
+            raise ValueError(f"max_segments must be >= 1, got {max_segments}")
+        self.config = IndexConfig() if config is None else config
+        self.buffer_capacity = int(buffer_capacity)
+        self.max_segments = int(max_segments)
+        self.segments: List[Segment] = []
+        self._dim: Optional[int] = None
+        self._buf_points: Optional[np.ndarray] = None  # (capacity, d) f32
+        self._buf_ids: Optional[np.ndarray] = None  # (capacity,) int32
+        self._buf_count = 0
+        self._alive = np.zeros((0,), np.bool_)  # dense by external id
+        self._values: Optional[np.ndarray] = None  # dense by external id
+        self._track_values: Optional[bool] = None
+        self._next_id = 0
+        self._gen = 0
+        self._delete_epoch = 0  # bumps on delete; invalidates dead caches
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def dim(self) -> Optional[int]:
+        return self._dim
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def n_live(self) -> int:
+        """Points visible to search (inserted, not deleted)."""
+        return int(np.count_nonzero(self._alive))
+
+    @property
+    def n_deleted(self) -> int:
+        return int(self._next_id - self.n_live)
+
+    @property
+    def n_buffered(self) -> int:
+        """Live points still in the write buffer (not yet in a segment)."""
+        if self._buf_count == 0:
+            return 0
+        return int(np.count_nonzero(self._alive[self._buf_ids[: self._buf_count]]))
+
+    def memory_report(self) -> Dict[str, Any]:
+        """Bytes for ALL resident state: segments, buffer, values, tombstones."""
+        per_segment = [seg.memory_bytes() for seg in self.segments]
+        buffer_bytes = 0
+        if self._buf_points is not None:
+            buffer_bytes = self._buf_points.nbytes + self._buf_ids.nbytes
+        rep: Dict[str, Any] = {
+            "segments_bytes": int(sum(per_segment)),
+            "buffer_bytes": int(buffer_bytes),
+            "values_bytes": 0 if self._values is None else int(self._values.nbytes),
+            "tombstone_bytes": int(self._alive.nbytes),
+            "per_segment": [int(b) for b in per_segment],
+            "n_segments": self.n_segments,
+            "n_live": self.n_live,
+            "n_deleted": self.n_deleted,
+            "n_buffered": self.n_buffered,
+        }
+        rep["total_bytes"] = (
+            rep["segments_bytes"]
+            + rep["buffer_bytes"]
+            + rep["values_bytes"]
+            + rep["tombstone_bytes"]
+        )
+        return rep
+
+    def __repr__(self) -> str:
+        mb = self.memory_report()["total_bytes"] / 1e6
+        return (
+            f"MutableHilbertIndex(n_live={self.n_live}, "
+            f"n_segments={self.n_segments}, "
+            f"buffered={self.n_buffered}/{self.buffer_capacity}, "
+            f"deleted={self.n_deleted}, dim={self._dim}, {mb:.2f} MB)"
+        )
+
+    # -- mutation ------------------------------------------------------------
+
+    def _register(
+        self, points, values
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Shared insert bookkeeping: dims, values mode, ids, alive mask."""
+        pts = np.asarray(jax.device_get(points), np.float32)
+        if pts.ndim == 1:
+            pts = pts[None, :]
+        if pts.ndim != 2:
+            raise ValueError(f"points must be (m, d), got shape {pts.shape}")
+        m = pts.shape[0]
+        if m == 0:
+            return pts, np.zeros((0,), np.int32)
+        if self._track_values is not None and (
+            (values is not None) != self._track_values
+        ):
+            raise ValueError(
+                "inconsistent values tracking: every insert must carry values "
+                "or none may (first insert decides)"
+            )
+        # Validate EVERYTHING before any state mutation (including pinning
+        # the values mode): a failed insert must leave the index unchanged.
+        vals = None
+        if values is not None:
+            vals = np.asarray(jax.device_get(values))
+            if vals.shape[:1] != (m,):
+                raise ValueError(f"values must be (m, ...) with m={m}")
+        if self._dim is not None and pts.shape[1] != self._dim:
+            raise ValueError(f"dim mismatch: index is {self._dim}, got {pts.shape[1]}")
+        if self._next_id + m > _MAX_IDS:
+            raise OverflowError("external id space (int32) exhausted")
+        if self._dim is None:
+            self._dim = int(pts.shape[1])
+            self._buf_points = np.zeros(
+                (self.buffer_capacity, self._dim), np.float32
+            )
+            self._buf_ids = np.full((self.buffer_capacity,), -1, np.int32)
+        if self._track_values is None:
+            self._track_values = values is not None
+        ids = np.arange(self._next_id, self._next_id + m, dtype=np.int32)
+        self._next_id += m
+        self._alive = np.concatenate([self._alive, np.ones((m,), np.bool_)])
+        if vals is not None:
+            self._values = (
+                vals.copy()
+                if self._values is None
+                else np.concatenate([self._values, vals])
+            )
+        return pts, ids
+
+    def insert(
+        self, points: jax.Array, values: Optional[jax.Array] = None
+    ) -> np.ndarray:
+        """Insert points (m, d); returns their stable external ids (m,) int32.
+
+        Points land in the write buffer (searchable immediately, exactly);
+        each buffer fill seals a segment, and tier merging keeps the segment
+        count at most ``max_segments``.  ``values`` attaches one payload per
+        point — either every insert carries values or none does.
+        """
+        pts, ids = self._register(points, values)
+        m = pts.shape[0]
+        if m == 0:
+            return ids
+
+        done = 0
+        while done < m:
+            take = min(self.buffer_capacity - self._buf_count, m - done)
+            sl = slice(self._buf_count, self._buf_count + take)
+            self._buf_points[sl] = pts[done : done + take]
+            self._buf_ids[sl] = ids[done : done + take]
+            self._buf_count += take
+            done += take
+            if self._buf_count >= self.buffer_capacity:
+                self.flush()
+        self._maybe_merge_tiers()
+        return ids
+
+    def bulk_load(
+        self, points: jax.Array, values: Optional[jax.Array] = None
+    ) -> np.ndarray:
+        """Seal a whole corpus as ONE segment, bypassing the write buffer.
+
+        The LSM bulk-load path: the initial corpus of a store should be one
+        large segment (search latency/recall identical to a static
+        ``HilbertIndex``), not ``n/buffer_capacity`` small ones.  Returns
+        external ids like :meth:`insert`.
+        """
+        if self._buf_count:
+            self.flush()
+        pts, ids = self._register(points, values)
+        if pts.shape[0] == 0:
+            raise ValueError("bulk_load needs a non-empty (m, d) corpus")
+        self.segments.append(self._build_segment(pts, ids))
+        self._maybe_merge_tiers()
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone external ids; returns how many were newly deleted.
+
+        Out-of-range ids raise ``KeyError``; already-deleted ids are a no-op
+        (idempotent).  Rows are physically dropped at the next flush (buffer
+        rows) or compaction touching their segment.
+        """
+        idn = np.atleast_1d(np.asarray(jax.device_get(ids))).astype(np.int64)
+        if idn.size == 0:
+            return 0
+        if (idn < 0).any() or (idn >= self._next_id).any():
+            bad = idn[(idn < 0) | (idn >= self._next_id)]
+            raise KeyError(f"unknown external ids: {bad[:8].tolist()}")
+        uniq = np.unique(idn)
+        newly = int(np.count_nonzero(self._alive[uniq]))
+        self._alive[uniq] = False
+        if newly:
+            self._delete_epoch += 1
+        return newly
+
+    def _segment_dead(self, seg: Segment) -> int:
+        """Tombstone count inside a segment, cached between deletes."""
+        if seg.dead_epoch != self._delete_epoch:
+            seg.dead_cache = seg.n_points - int(
+                np.count_nonzero(self._alive[seg.ids])
+            )
+            seg.dead_epoch = self._delete_epoch
+        return seg.dead_cache
+
+    # -- segment lifecycle ---------------------------------------------------
+
+    def _build_segment(self, pts: np.ndarray, ids: np.ndarray) -> Segment:
+        # config.store_points is honored: True (the default) keeps raw fp32
+        # points on each segment so compaction can re-sort them; False saves
+        # that RAM for serving-only deployments at the cost of compaction
+        # (tier merges skip point-less segments; compact() raises).
+        index = HilbertIndex.build(jnp.asarray(pts), self.config)
+        seg = Segment(index=index, ids=np.ascontiguousarray(ids, np.int32),
+                      gen=self._gen)
+        self._gen += 1
+        return seg
+
+    def flush(self) -> Optional[Segment]:
+        """Seal the write buffer's live rows into an immutable segment.
+
+        Dead buffer rows are dropped here for good.  No-op (returns None) on
+        an empty or fully tombstoned buffer.
+        """
+        if self._buf_count == 0:
+            return None
+        ids = self._buf_ids[: self._buf_count]
+        live = self._alive[ids]
+        pts = self._buf_points[: self._buf_count][live].copy()
+        ids = ids[live].copy()
+        self._buf_count = 0
+        if ids.size == 0:
+            return None
+        seg = self._build_segment(pts, ids)
+        self.segments.append(seg)
+        return seg
+
+    def _merge_segments(self, to_merge: Sequence[Segment]) -> Optional[Segment]:
+        """Replace ``to_merge`` with one segment; tombstoned rows vanish."""
+        for seg in to_merge:
+            if seg.index.points is None:
+                raise ValueError(
+                    "cannot compact a segment built without stored points "
+                    "(IndexConfig(store_points=False), or a store_points="
+                    "False index adopted via from_index)"
+                )
+        pts = np.concatenate(
+            [np.asarray(seg.index.points, np.float32) for seg in to_merge]
+        )
+        ids = np.concatenate([seg.ids for seg in to_merge])
+        live = self._alive[ids]
+        pts, ids = pts[live], ids[live]
+        # External-id order == insertion order: a full compaction therefore
+        # feeds the rebuild the same point sequence a fresh build would see.
+        order = np.argsort(ids, kind="stable")
+        pts, ids = pts[order], ids[order]
+        self.segments = [s for s in self.segments if s not in to_merge]
+        if ids.size == 0:
+            return None
+        seg = self._build_segment(pts, ids)
+        self.segments.append(seg)
+        return seg
+
+    def _maybe_merge_tiers(self) -> None:
+        while len(self.segments) > self.max_segments:
+            # Only segments holding raw points can be re-sorted; without
+            # store_points the segment count is unbounded by design.
+            mergeable = [s for s in self.segments if s.index.points is not None]
+            if len(mergeable) < 2:
+                return
+            smallest = sorted(mergeable, key=lambda s: s.n_points)[:2]
+            self._merge_segments(smallest)
+
+    def compact(self) -> "MutableHilbertIndex":
+        """Full compaction: flush, then merge ALL segments into one.
+
+        Afterwards the index holds at most one segment containing exactly
+        the live points in insertion order, and every tombstoned row has
+        been physically dropped.  Returns self (chainable).
+        """
+        self.flush()
+        if self.segments:
+            self._merge_segments(list(self.segments))
+        return self
+
+    # -- search --------------------------------------------------------------
+
+    def search(
+        self,
+        queries: jax.Array,
+        params: Optional[SearchParams] = None,
+        *,
+        backend: str = "auto",
+        query_chunk: int = 2048,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Fan-out top-k over buffer + segments, merged exactly.
+
+        Returns (ids (Q, k), sq-distances (Q, k)) like ``HilbertIndex.search``
+        but with **external** ids; when fewer than k live points exist the
+        tail is padded with id -1 / distance +inf.  Segment distances are
+        ADC (asymmetric vs 4-bit codes) as in the paper; buffer distances
+        are exact fp32 — both approximate the true metric, and the merge
+        compares them directly.  Each segment is queried for
+        ``k + (its tombstone count)`` so masked rows cannot displace live
+        results — up to the stage-2 candidate pool (``k2*(2h+1)``).  A
+        segment tombstoned past that bound is rewritten on the spot
+        (read-triggered compaction) when it stores raw points; without
+        stored points its recall degrades until the ids are reinserted.
+        """
+        if params is None:
+            params = SearchParams()
+        q = jnp.asarray(queries)
+        qn, k = q.shape[0], params.k
+        # stage-2 candidate pool per segment; lax.top_k caps k there.
+        cap = params.k2 * (2 * params.h + 1)
+        parts_ids: List[np.ndarray] = []
+        parts_d: List[np.ndarray] = []
+        for seg in list(self.segments):
+            dead = self._segment_dead(seg)
+            if dead > max(cap - k, 0) and seg.index.points is not None:
+                # So many tombstones that dead candidates could crowd live
+                # neighbors out of the stage-1/2 candidate pools (k can no
+                # longer be inflated past the pool size).  Read-triggered
+                # compaction: rewrite just this segment, dropping its dead
+                # rows for good, then search the clean replacement.
+                seg = self._merge_segments([seg])
+                if seg is None:  # segment was fully tombstoned
+                    continue
+                dead = 0
+            k_seg = max(1, min(k + dead, cap))
+            sids, sd2 = seg.index.search(
+                q, dataclasses.replace(params, k=k_seg),
+                backend=backend, query_chunk=query_chunk,
+            )
+            sids = np.clip(np.asarray(sids), 0, seg.n_points - 1)
+            parts_ids.append(seg.ids[sids])
+            parts_d.append(np.asarray(sd2, np.float32))
+        if self.n_buffered:
+            valid = np.zeros((self.buffer_capacity,), np.bool_)
+            bids = self._buf_ids[: self._buf_count]
+            valid[: self._buf_count] = self._alive[bids]
+            idx, bd2 = search_lib.brute_force_topk(
+                q, jnp.asarray(self._buf_points), jnp.asarray(valid),
+                k=min(k, self.buffer_capacity),
+            )
+            parts_ids.append(self._buf_ids[np.asarray(idx)])
+            parts_d.append(np.asarray(bd2, np.float32))
+        if not parts_ids:
+            return (
+                jnp.full((qn, k), -1, jnp.int32),
+                jnp.full((qn, k), jnp.inf, jnp.float32),
+            )
+        ids = np.concatenate(parts_ids, axis=1)
+        d2 = np.concatenate(parts_d, axis=1)
+        dead = ~self._alive[np.clip(ids, 0, max(self._next_id - 1, 0))]
+        d2 = np.where(np.isfinite(d2) & ~dead, d2, np.inf)
+        if ids.shape[1] < k:
+            pad = k - ids.shape[1]
+            ids = np.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+            d2 = np.pad(d2, ((0, 0), (0, pad)), constant_values=np.inf)
+        order = np.argsort(d2, axis=1, kind="stable")[:, :k]
+        out_d = np.take_along_axis(d2, order, axis=1)
+        out_i = np.take_along_axis(ids, order, axis=1)
+        out_i = np.where(np.isfinite(out_d), out_i, -1)
+        return jnp.asarray(out_i, dtype=jnp.int32), jnp.asarray(out_d)
+
+    # -- values --------------------------------------------------------------
+
+    def values_at(self, ids, fill=0) -> jax.Array:
+        """Gather per-point values for search-result ids; -1 slots get fill."""
+        if self._values is None:
+            raise ValueError("this index tracks no values (insert them)")
+        idn = np.asarray(jax.device_get(ids))
+        safe = np.clip(idn, 0, self._next_id - 1)
+        out = self._values[safe]
+        mask = (idn >= 0).reshape(idn.shape + (1,) * (out.ndim - idn.ndim))
+        return jnp.asarray(np.where(mask, out, fill))
+
+    def values_dense(self) -> jax.Array:
+        """The dense by-external-id values array (stale rows where deleted)."""
+        if self._values is None:
+            raise ValueError("this index tracks no values (insert them)")
+        return jnp.asarray(self._values)
+
+    # -- adoption ------------------------------------------------------------
+
+    @classmethod
+    def from_index(
+        cls,
+        index: HilbertIndex,
+        *,
+        values: Optional[jax.Array] = None,
+        buffer_capacity: int = 4096,
+        max_segments: int = 8,
+    ) -> "MutableHilbertIndex":
+        """Adopt a prebuilt immutable index as segment 0 (ids = 0..n-1).
+
+        If the index was built with ``store_points=False`` it can serve and
+        absorb inserts/deletes, but compactions touching segment 0 raise
+        (no raw points to re-sort).
+        """
+        self = cls(
+            config=index.config,
+            buffer_capacity=buffer_capacity,
+            max_segments=max_segments,
+        )
+        n = index.n_points
+        self._dim = index.dim
+        self._buf_points = np.zeros((self.buffer_capacity, self._dim), np.float32)
+        self._buf_ids = np.full((self.buffer_capacity,), -1, np.int32)
+        self._next_id = n
+        self._alive = np.ones((n,), np.bool_)
+        if values is not None:
+            vals = np.asarray(jax.device_get(values))
+            if vals.shape[:1] != (n,):
+                raise ValueError(f"values must be ({n}, ...)")
+            self._values = vals.copy()
+        # Pin the values mode now: a later insert(..., values=...) on a
+        # valueless adoption would misalign the dense values array with the
+        # already-assigned external ids 0..n-1.
+        self._track_values = values is not None
+        self.segments = [
+            Segment(index=index, ids=np.arange(n, dtype=np.int32), gen=0)
+        ]
+        self._gen = 1
+        return self
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str, *, kind: str = _DEFAULT_KIND,
+             extra_meta: Optional[Dict] = None) -> str:
+        return save_mutable_bundle(self, path, kind=kind, extra_meta=extra_meta)
+
+    @classmethod
+    def load(cls, path: str, *, kind: str = _DEFAULT_KIND
+             ) -> "MutableHilbertIndex":
+        index, _ = load_mutable_bundle(path, kind=kind)
+        return index
+
+
+def save_mutable_bundle(
+    index: MutableHilbertIndex,
+    path: str,
+    *,
+    kind: str = _DEFAULT_KIND,
+    extra_meta: Optional[Dict] = None,
+) -> str:
+    """Persist a mutable index as segment bundles + state bundle + manifest.
+
+    Each piece is an atomic ``repro.checkpoint`` bundle and NOTHING a
+    previous manifest references is ever rewritten in place: segments are
+    immutable and keyed by generation (an existing bundle with a matching
+    uid is skipped, so repeated saves only write what changed) and the
+    mutable buffer/tombstone state goes to a FRESH step each save, with the
+    step recorded in the manifest.  The top-level JSON manifest is renamed
+    into place LAST, so a crash mid-save — or a concurrent load in another
+    worker — always observes a complete, mutually consistent
+    (manifest, bundles) pair.
+
+    After the manifest commits, bundles referenced by neither the new nor
+    the immediately-previous manifest are pruned (writers are assumed
+    single; readers get one manifest generation of grace), so repeated
+    saves to one path occupy bounded disk.
+    """
+    os.makedirs(path, exist_ok=True)
+    prev_manifest = {}
+    try:
+        with open(os.path.join(path, _MANIFEST)) as f:
+            prev_manifest = json.load(f)
+    except (OSError, ValueError):
+        pass
+    seg_names = []
+    for seg in index.segments:
+        name = f"seg_{seg.gen:06d}"
+        seg_dir = os.path.join(path, "segments", name)
+        # Content-addressed dedup: only skip the write when the bundle on
+        # disk holds exactly this segment's ids+codes (a different index
+        # saved to the same path therefore can never leave stale data).
+        uid = seg.content_uid()
+        if _segment_bundle_uid(seg_dir) != uid:
+            save_index_bundle(
+                seg.index,
+                seg_dir,
+                kind=_SEGMENT_KIND,
+                extra_arrays={"ids": jnp.asarray(seg.ids)},
+                extra_meta={"segment_uid": uid},
+            )
+        seg_names.append(name)
+    # Buffer state: live rows only (tombstoned buffer rows drop here, same
+    # as a flush would).
+    bids = index._buf_ids[: index._buf_count] if index._buf_count else (
+        np.zeros((0,), np.int32)
+    )
+    bmask = index._alive[bids] if bids.size else np.zeros((0,), np.bool_)
+    d = index._dim if index._dim is not None else 0
+    bpts = (
+        index._buf_points[: index._buf_count][bmask]
+        if bids.size
+        else np.zeros((0, d), np.float32)
+    )
+    state: Dict[str, np.ndarray] = {
+        "alive": index._alive,
+        "buffer_points": bpts,
+        "buffer_ids": bids[bmask] if bids.size else bids,
+    }
+    if index._values is not None:
+        state["values"] = index._values
+    state_dir = os.path.join(path, "state")
+    state_step = (checkpoint.latest_step(state_dir) or 0) + 1
+    checkpoint.save(state_dir, step=state_step, tree=state, extra={})
+    manifest = {
+        "state_step": state_step,
+        "kind": kind,
+        "format_version": 1,
+        "config": index.config.to_dict(),
+        "buffer_capacity": index.buffer_capacity,
+        "max_segments": index.max_segments,
+        "next_id": int(index._next_id),
+        "gen": int(index._gen),
+        "dim": index._dim,
+        "track_values": index._track_values,
+        "segments": seg_names,
+        "extra_meta": extra_meta or {},
+    }
+    checkpoint.atomic_write_json(os.path.join(path, _MANIFEST), manifest)
+    _prune_unreferenced(path, manifest, prev_manifest)
+    return path
+
+
+def _prune_unreferenced(path: str, manifest: Dict, prev_manifest: Dict) -> None:
+    """Drop bundles neither the new nor the previous manifest references."""
+    keep_segs = set(manifest["segments"]) | set(prev_manifest.get("segments", []))
+    seg_root = os.path.join(path, "segments")
+    if os.path.isdir(seg_root):
+        for name in os.listdir(seg_root):
+            if name.startswith("seg_") and name not in keep_segs:
+                shutil.rmtree(os.path.join(seg_root, name), ignore_errors=True)
+    keep_steps = {manifest["state_step"], prev_manifest.get("state_step")}
+    state_root = os.path.join(path, "state")
+    if os.path.isdir(state_root):
+        for name in os.listdir(state_root):
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            if int(name.split("_")[1]) not in keep_steps:
+                shutil.rmtree(os.path.join(state_root, name),
+                              ignore_errors=True)
+
+
+def _segment_bundle_uid(seg_dir: str) -> Optional[str]:
+    """uid of an already-saved segment bundle, or None if absent/unreadable."""
+    step = checkpoint.latest_step(seg_dir)
+    if step is None:
+        return None
+    try:
+        with open(os.path.join(seg_dir, f"step_{step:08d}",
+                               "manifest.json")) as f:
+            return json.load(f).get("extra", {}).get("segment_uid")
+    except (OSError, ValueError):
+        return None
+
+
+def _restore_state_bundle(path: str, step: Optional[int]
+                          ) -> Dict[str, np.ndarray]:
+    """Load every leaf of a checkpoint bundle with manifest-declared dtypes."""
+    if step is None:  # pre-state_step manifests: newest available
+        step = checkpoint.latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no state bundle under {path!r}")
+    with open(os.path.join(path, f"step_{step:08d}", "manifest.json")) as f:
+        manifest = json.load(f)
+    abstract = {}
+    for key, (_, dtype_str) in manifest["leaves"].items():
+        abstract[key[2:-2]] = jax.ShapeDtypeStruct((0,), np.dtype(dtype_str))
+    arrays, _ = checkpoint.restore(path, step, abstract)
+    return {k: np.asarray(jax.device_get(v)) for k, v in arrays.items()}
+
+
+def load_mutable_bundle(
+    path: str, *, kind: str = _DEFAULT_KIND
+) -> Tuple[MutableHilbertIndex, Dict]:
+    """Inverse of :func:`save_mutable_bundle`; returns (index, extra_meta)."""
+    mpath = os.path.join(path, _MANIFEST)
+    if not os.path.exists(mpath):
+        raise FileNotFoundError(f"no mutable-index manifest under {path!r}")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    if manifest.get("kind") != kind:
+        raise ValueError(
+            f"{path!r} is not a mutable-index checkpoint of kind {kind!r} "
+            f"(kind={manifest.get('kind')!r})"
+        )
+    index = MutableHilbertIndex(
+        config=IndexConfig.from_dict(manifest["config"]),
+        buffer_capacity=int(manifest["buffer_capacity"]),
+        max_segments=int(manifest["max_segments"]),
+    )
+    for name in manifest["segments"]:
+        seg_index, extras, _ = load_index_bundle(
+            os.path.join(path, "segments", name), kind=_SEGMENT_KIND
+        )
+        index.segments.append(
+            Segment(
+                index=seg_index,
+                ids=np.asarray(jax.device_get(extras["ids"]), np.int32),
+                gen=int(name.split("_")[1]),
+            )
+        )
+    state = _restore_state_bundle(
+        os.path.join(path, "state"), manifest.get("state_step")
+    )
+    index._alive = np.asarray(state["alive"], np.bool_)
+    index._next_id = int(manifest["next_id"])
+    index._gen = int(manifest["gen"])
+    index._track_values = manifest.get("track_values")
+    if "values" in state:
+        index._values = state["values"]
+    dim = manifest.get("dim")
+    if dim is not None:
+        index._dim = int(dim)
+        index._buf_points = np.zeros((index.buffer_capacity, index._dim),
+                                     np.float32)
+        index._buf_ids = np.full((index.buffer_capacity,), -1, np.int32)
+        bpts, bids = state["buffer_points"], state["buffer_ids"]
+        m = int(bids.shape[0])
+        if m:
+            index._buf_points[:m] = bpts
+            index._buf_ids[:m] = bids
+        index._buf_count = m
+    return index, manifest.get("extra_meta", {})

@@ -9,9 +9,12 @@ model's softmax (Khandelwal et al., 2020):
     p(w) = (1-λ)·p_model(w) + λ·p_knn(w),
     p_knn ∝ Σ_{(h_i,w_i) ∈ kNN} 1[w_i=w]·exp(-d(h, h_i)/T)
 
-The store is just a :class:`repro.index.HilbertIndex` plus a values array —
-the index carries its own config, so ``save()``/``load()`` lets one build
-job feed many serving workers.
+The store is a :class:`repro.index.MutableHilbertIndex` carrying next-token
+values, so a serving deployment can **grow and shrink while serving**:
+:meth:`RetrievalStore.append` absorbs new (hidden, token) pairs into the
+write buffer (searchable immediately, sealed into segments as it fills) and
+:meth:`RetrievalStore.delete` tombstones stale entries — no offline rebuild.
+``save()``/``load()`` still lets one build job feed many serving workers.
 """
 
 from __future__ import annotations
@@ -21,58 +24,103 @@ from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import ForestConfig, SearchParams
 from repro.index import (
-    HilbertIndex,
     IndexConfig,
+    MutableHilbertIndex,
     load_index_bundle,
-    save_index_bundle,
+    load_mutable_bundle,
 )
+
+_STORE_KIND = "retrieval_store"
 
 
 @dataclasses.dataclass
 class RetrievalStore:
-    index: HilbertIndex
-    values: jax.Array          # (n,) int32 next-token per datastore entry
+    index: MutableHilbertIndex
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array,
-              config: Union[IndexConfig, ForestConfig, None] = None
+              config: Union[IndexConfig, ForestConfig, None] = None,
+              *, buffer_capacity: int = 4096, max_segments: int = 8
               ) -> "RetrievalStore":
         """keys: (n, d) hidden states; values: (n,) next tokens.
 
         ``config`` may be a full :class:`IndexConfig` or (for one release of
-        backward compatibility) a bare ``ForestConfig``.  Serving only runs
-        Algorithm-1 search, so raw points are not retained.
+        backward compatibility) a bare ``ForestConfig``.  The initial corpus
+        is bulk-loaded into one sealed segment so lookup latency matches a
+        static index; later :meth:`append` batches stream through the write
+        buffer.
+
+        The default config keeps raw fp32 keys on each segment so
+        :meth:`compact` can merge segments and drop tombstones; pass
+        ``IndexConfig(store_points=False)`` to reclaim that RAM for
+        append-only deployments that never compact.
         """
         if config is None:
-            config = IndexConfig(store_points=False)
+            config = IndexConfig()
         elif isinstance(config, ForestConfig):
-            config = IndexConfig(forest=config, store_points=False)
-        idx = HilbertIndex.build(keys, config)
-        return cls(index=idx, values=values)
+            config = IndexConfig(forest=config)
+        index = MutableHilbertIndex(
+            config, buffer_capacity=buffer_capacity, max_segments=max_segments
+        )
+        index.bulk_load(keys, values)
+        return cls(index=index)
+
+    @property
+    def values(self) -> jax.Array:
+        """Dense next-token array keyed by datastore id (kNN-LM gather)."""
+        return self.index.values_dense()
+
+    def append(self, keys: jax.Array, values: jax.Array) -> np.ndarray:
+        """Stream new (hidden, token) pairs in while serving; returns ids."""
+        return self.index.insert(keys, values)
+
+    def delete(self, ids) -> int:
+        """Tombstone datastore entries (stale documents, TTL eviction)."""
+        return self.index.delete(ids)
+
+    def compact(self) -> "RetrievalStore":
+        """Merge segments / drop tombstones (e.g. in a maintenance window)."""
+        self.index.compact()
+        return self
 
     def lookup(self, queries: jax.Array, params: SearchParams
                ) -> Tuple[jax.Array, jax.Array]:
-        """(Q, d) hidden states -> (ids (Q,k), sq-dists (Q,k))."""
+        """(Q, d) hidden states -> (ids (Q,k), sq-dists (Q,k)).
+
+        When fewer than k live entries exist, the tail is id -1 / +inf —
+        :func:`knn_lm_mix` masks those slots.
+        """
         return self.index.search(queries, params)
 
     def save(self, path: str) -> str:
-        """Persist index + values as ONE atomic checkpoint bundle.
+        """Persist segments + buffer + values as ONE manifest-committed save.
 
-        A crash mid-save or a concurrent :meth:`load` in another worker can
-        never observe the index and its values array out of sync.
+        Every piece is an atomic ``repro.checkpoint`` bundle and the
+        top-level manifest is renamed into place last, so a crash mid-save
+        or a concurrent :meth:`load` in another worker can never observe the
+        index and its values out of sync.
         """
-        return save_index_bundle(
-            self.index, path, kind="retrieval_store",
-            extra_arrays={"values": self.values},
-        )
+        return self.index.save(path, kind=_STORE_KIND)
 
     @classmethod
     def load(cls, path: str) -> "RetrievalStore":
-        index, extras, _ = load_index_bundle(path, kind="retrieval_store")
-        return cls(index=index, values=extras["values"])
+        try:
+            index, _ = load_mutable_bundle(path, kind=_STORE_KIND)
+        except FileNotFoundError:
+            # One release of backward compatibility: checkpoints written by
+            # the previous static RetrievalStore (a single HilbertIndex
+            # bundle + values sidecar, no mutable manifest) are adopted as a
+            # single sealed segment.  Saved with store_points=False, so
+            # they serve and absorb appends/deletes but cannot compact.
+            static_index, extras, _ = load_index_bundle(path, kind=_STORE_KIND)
+            index = MutableHilbertIndex.from_index(
+                static_index, values=extras["values"]
+            )
+        return cls(index=index)
 
 
 def knn_lm_mix(
@@ -86,8 +134,8 @@ def knn_lm_mix(
     """Return log of the mixed distribution (B, V)."""
     ids, d2 = store.lookup(hidden, params)            # (B, k)
     w = jax.nn.softmax(-d2 / temperature, axis=-1)    # (B, k)
-    tok = store.values[ids]                           # (B, k)
-    v = logits.shape[-1]
+    w = jnp.where(ids >= 0, w, 0.0)                   # mask -1 padding slots
+    tok = store.index.values_at(ids, fill=0)          # (B, k)
     p_knn = jnp.zeros_like(logits).at[
         jnp.arange(logits.shape[0])[:, None], tok
     ].add(w)
