@@ -9,6 +9,8 @@ API (build once → search / knn_graph off the same artifact).
   kernels  — hamming/qdist microbench + TPU roofline model
   hsort    — Hilbert-sort scaling (2016 algorithm claim)
   churn    — streaming insert/delete/search on the mutable index
+  search   — fused packed search path vs per-tree-loop reference
+             (emits BENCH_search.json)
 
 ``python -m benchmarks.run [names...]`` (default: all).
 """
@@ -19,7 +21,7 @@ import time
 
 def main() -> None:
     names = sys.argv[1:] or ["kernels", "hsort", "phases", "table2", "table1",
-                             "churn"]
+                             "churn", "search"]
     t00 = time.time()
     for name in names:
         print(f"\n===== {name} =====", flush=True)
@@ -36,6 +38,8 @@ def main() -> None:
             from benchmarks import hilbert_sort_bench as m
         elif name == "churn":
             from benchmarks import churn as m
+        elif name == "search":
+            from benchmarks import search_path as m
         else:
             raise SystemExit(f"unknown benchmark {name!r}")
         m.main()

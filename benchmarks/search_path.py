@@ -1,0 +1,115 @@
+"""Search hot-path benchmark: packed+fused vs unpacked+per-tree-loop.
+
+Quantifies the PR-3 tentpole so the perf trajectory is machine-readable
+from here on:
+
+* **latency/QPS** — p50/p99 per-batch wall time and queries/sec for
+  (a) the fused single-dispatch packed path (``search()``, the default) and
+  (b) the per-tree-loop + unpacked-stage-2 reference (``fused=False``),
+  both after jit warmup;
+* **dispatches per chunk** — the structural XLA-dispatch count of each
+  path: fused is 1 regardless of ``n_trees``; the loop pays
+  ``n_trees + 2`` (query sketch + one per tree + stage 2);
+* **resident bytes** — actual packed residency vs the unpacked uint8
+  baseline layout this PR replaced.
+
+Results land in ``BENCH_search.json`` (cwd).  ``--smoke`` shrinks to CI
+scale; also runnable via ``python -m benchmarks.run search``.
+"""
+
+import json
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import ann_datasets
+from repro.index import ForestConfig, HilbertIndex, IndexConfig, SearchParams
+
+
+def _time_path(index, queries, params, reps, **kw):
+    index.search(queries, params, **kw)  # warm the jit cache
+    out = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        ids, _ = index.search(queries, params, **kw)
+        jnp.asarray(ids).block_until_ready()
+        out.append(time.perf_counter() - t0)
+    s = np.sort(np.asarray(out))
+    p50 = float(s[int(0.50 * (len(s) - 1))])
+    p99 = float(s[int(0.99 * (len(s) - 1))])
+    return {
+        "p50_ms": 1000 * p50,
+        "p99_ms": 1000 * p99,
+        "qps": queries.shape[0] / p50,
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    if smoke:
+        n, d, q, reps = 4000, 64, 64, 5
+        fcfg = ForestConfig(n_trees=4, bits=4, key_bits=256, leaf_size=16)
+        params = SearchParams(k1=16, k2=64, h=2, k=10)
+    else:
+        n, d, q, reps = 50000, 384, 512, 30
+        fcfg = ForestConfig(n_trees=8, bits=4, key_bits=448, leaf_size=32)
+        params = SearchParams(k1=48, k2=192, h=2, k=30)
+    data, queries = ann_datasets.lowrank_dataset_with_queries(
+        n, q, d, n_clusters=32, seed=0
+    )
+    queries = jnp.asarray(queries)
+    cfg = IndexConfig(forest=fcfg, store_points=False)
+    index = HilbertIndex.build(jnp.asarray(data), cfg)
+    rep = index.memory_report()
+
+    fused = _time_path(index, queries, params, reps)
+    loop = _time_path(index, queries, params, reps, fused=False)
+
+    # Exactness cross-check: the two paths must agree bit-for-bit on XLA.
+    ids_f, d2_f = index.search(queries, params, backend="xla")
+    ids_l, d2_l = index.search(queries, params, backend="xla", fused=False)
+    assert np.array_equal(np.asarray(ids_f), np.asarray(ids_l))
+    assert np.array_equal(np.asarray(d2_f), np.asarray(d2_l))
+
+    result = {
+        "n": n,
+        "d": d,
+        "q": q,
+        "n_trees": fcfg.n_trees,
+        "params": {"k1": params.k1, "k2": params.k2, "h": params.h,
+                   "k": params.k},
+        # one jitted fused_search_chunk call vs sketch + n_trees stage-1
+        # calls + stage-2 (the structural dispatch count per query chunk)
+        "dispatches_per_chunk": {
+            "fused_scan": 1,
+            "per_tree_loop": fcfg.n_trees + 2,
+        },
+        "stage1_dispatches_per_chunk": {
+            "fused_scan": 1,
+            "per_tree_loop": fcfg.n_trees,
+        },
+        "latency": {"fused_packed": fused, "per_tree_loop_unpacked": loop},
+        "packed_vs_unpacked_p50_speedup": loop["p50_ms"] / fused["p50_ms"],
+        "resident_bytes": {
+            "packed": rep["resident_bytes"],
+            "codes_packed": rep["codes_bytes"],
+            "codes_unpacked_baseline": n * d,  # uint8 layout pre-PR-3
+            "unpacked_layout_total": rep["resident_bytes"]
+            - rep["codes_bytes"] + n * d,
+        },
+        "bit_identical_paths": True,
+    }
+    result["resident_bytes"]["savings_frac"] = 1.0 - (
+        result["resident_bytes"]["packed"]
+        / result["resident_bytes"]["unpacked_layout_total"]
+    )
+    with open("BENCH_search.json", "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    print("\nwrote BENCH_search.json", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -16,6 +16,11 @@ constant, with only the computation time increasing").
 As in :mod:`repro.core.search` we merge each order's candidates into a
 running sketch-filtered top-k2 (associative, exact) instead of materializing
 all n·k1 candidates (which would be ~92 GB at challenge scale).
+
+Unlike Algorithm 1's serving path, graph construction never touches the
+quantized codes (the final re-rank is exact fp32 against the stored
+points), so it is unaffected by the packed-resident code layout the search
+path moved to — only the shared sketches flow in from the index.
 """
 
 from __future__ import annotations

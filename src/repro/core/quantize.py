@@ -20,7 +20,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Quantizer", "fit", "encode", "decode", "adc_distance", "pack_codes"]
+__all__ = [
+    "Quantizer",
+    "fit",
+    "encode",
+    "decode",
+    "adc_distance",
+    "adc_distance_packed",
+    "pack_codes",
+    "unpack_codes",
+]
 
 
 class Quantizer(NamedTuple):
@@ -92,12 +101,15 @@ def adc_distance(quant: Quantizer, queries: jax.Array, codes: jax.Array) -> jax.
 
 
 def pack_codes(codes: jax.Array) -> jax.Array:
-    """Pack (n, d) 4-bit codes into (n, ceil(d/8)) uint32 words (memory model).
+    """Pack (n, d) 4-bit codes into (n, ceil(d/8)) uint32 words.
 
-    The in-RAM representation the paper budgets (23M x 384 x 4 bit = 4.4 GB,
-    MSB shared with the sketch).  Compute paths use the unpacked uint8 form;
-    the packed form is what `memory_report()` accounts and what the qdist
-    Pallas kernel consumes on TPU.
+    This is the **resident** representation: the paper budgets 23M x 384 x
+    4 bit = 4.4 GB (MSB shared with the sketch), and :class:`HilbertIndex`
+    stores ``codes_master`` in exactly this layout — half the RAM and HBM
+    traffic of unpacked uint8.  The qdist Pallas kernel consumes the packed
+    words directly on TPU; the XLA path unpacks candidate windows on the fly
+    (:func:`adc_distance_packed`), which is lossless and therefore
+    bit-identical to computing on unpacked codes.
     """
     n, d = codes.shape
     pad = (-d) % 8
@@ -109,8 +121,26 @@ def pack_codes(codes: jax.Array) -> jax.Array:
 
 
 def unpack_codes(packed: jax.Array, d: int) -> jax.Array:
-    """Inverse of :func:`pack_codes`."""
-    n, w = packed.shape
+    """Inverse of :func:`pack_codes` (lossless; works on any leading shape).
+
+    ``packed`` is (..., W) uint32; returns (..., d) uint8.
+    """
+    w = packed.shape[-1]
     shifts = jnp.arange(8, dtype=jnp.uint32) * 4
-    c = (packed[:, :, None] >> shifts[None, None, :]) & jnp.uint32(0xF)
-    return c.reshape(n, w * 8)[:, :d].astype(jnp.uint8)
+    c = (packed[..., None] >> shifts) & jnp.uint32(0xF)
+    return c.reshape(*packed.shape[:-1], w * 8)[..., :d].astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("d",))
+def adc_distance_packed(
+    quant: Quantizer, queries: jax.Array, packed: jax.Array, *, d: int
+) -> jax.Array:
+    """:func:`adc_distance` on nibble-packed candidate codes (q, c, W).
+
+    Unpacks to uint8 and reuses :func:`adc_distance`, so the result is
+    **bit-identical** to the unpacked path (pack/unpack is lossless).  The
+    TPU serving path instead feeds the packed words straight to the Pallas
+    kernel (``repro.kernels.qdist.qdist_windows_from_packed``), trading bit
+    identity for the 0.5 B/dim HBM roofline.
+    """
+    return adc_distance(quant, queries, unpack_codes(packed, d))

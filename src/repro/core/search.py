@@ -24,6 +24,18 @@ Implementation notes vs the pseudocode:
     gathers over the sorted copies).
   * Duplicates (same point from several trees / overlapping windows) are
     deduped during the merge so the final top-k can't contain repeats.
+
+Fused scan pipeline (the serving hot path): :func:`fused_search_chunk` runs
+the WHOLE per-chunk pipeline — query sketching, a ``lax.scan`` over the
+stacked forest arrays (``orders``/``directories``/``perms``/``flips``) that
+replaces the per-tree Python loop, and the packed-code stage 2 — inside ONE
+jitted computation, so a query chunk costs one XLA dispatch regardless of
+``n_trees``.  Stage 2 reads candidate codes as contiguous ±h **windowed
+dynamic slices** from the nibble-packed ``(n, ceil(d/8))`` uint32 resident
+codes (half the HBM traffic of unpacked uint8) instead of a ``(Q, C, d)``
+random gather; on TPU the window distances route through the Pallas
+``qdist_windows_from_packed`` kernel, elsewhere through a packed XLA path
+that unpacks losslessly and is therefore bit-identical to unpacked ADC.
 """
 
 from __future__ import annotations
@@ -48,10 +60,33 @@ __all__ = [
     "hilbert_master_sort",
     "stage1_tree_merge",
     "stage2_expand_rank",
+    "stage2_packed_windows",
+    "fused_search_chunk",
     "brute_force_topk",
+    "paper_memory_model",
 ]
 
 _INF = jnp.int32(2**30)
+
+
+def paper_memory_model(n: int, d: int, sketch_bytes: int, forest_bytes: int
+                       ) -> dict:
+    """The paper's RAM-budget table (§3.1) as a dict of byte counts.
+
+    Single source of truth for both the legacy container's and the facade's
+    ``memory_report`` (previously copy-pasted).  ``quantized_bytes`` is the
+    4-bit-packed accounting — since PR 3 the codes are RESIDENT in exactly
+    this layout, so it equals the actual ``codes_master.nbytes``.
+    """
+    packed_codes = n * (-(-d // 8)) * 4  # 4-bit packed into uint32 words
+    shared = n * (-(-d // 32)) * 4  # MSB plane counted once
+    return {
+        "forest_bytes": forest_bytes,
+        "sketch_bytes": sketch_bytes,
+        "quantized_bytes": packed_codes,
+        "shared_bit_savings": shared,
+        "combined_stage2_bytes": sketch_bytes + packed_codes - shared,
+    }
 
 
 class HilbertForestIndex(NamedTuple):
@@ -59,6 +94,8 @@ class HilbertForestIndex(NamedTuple):
 
     Carries no config, so callers of the legacy :func:`search` must re-supply
     the exact build-time ``ForestConfig`` (the footgun the facade removes).
+    Codes here stay UNPACKED (n, d) uint8 for one release of layout
+    compatibility; the facade stores them nibble-packed.
     """
 
     forest: forest_lib.HilbertForest
@@ -74,17 +111,12 @@ class HilbertForestIndex(NamedTuple):
 
     def memory_report(self) -> dict:
         """Bytes by component, mirroring the paper's RAM budget table."""
-        d = self.codes_master.shape[1]
-        packed_codes = self.n_points * (-(-d // 8)) * 4  # 4-bit packed
-        sketches = int(np.prod(self.sketches_master.shape)) * 4
-        shared = self.n_points * (-(-d // 32)) * 4  # MSB plane counted once
-        return {
-            "forest_bytes": self.forest.memory_bytes(),
-            "sketch_bytes": sketches,
-            "quantized_bytes": packed_codes,
-            "shared_bit_savings": shared,
-            "combined_stage2_bytes": sketches + packed_codes - shared,
-        }
+        return paper_memory_model(
+            self.n_points,
+            self.codes_master.shape[1],
+            int(np.prod(self.sketches_master.shape)) * 4,
+            self.forest.memory_bytes(),
+        )
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -155,34 +187,185 @@ def stage1_tree_merge(
     return _merge_topk_dedup(best_pos, best_dist, mpos, hd, k2)
 
 
-@functools.partial(jax.jit, static_argnames=("h", "k"))
-def stage2_expand_rank(
-    queries, best_pos, codes_master, master_order, quant, *, h, k
-):
-    """±h master-order expansion, dedup, exact ADC distance, final top-k."""
-    n = master_order.shape[0]
-    deltas = jnp.arange(-h, h + 1, dtype=jnp.int32)
-    pos = best_pos[:, :, None] + deltas[None, None, :]
-    pos = jnp.clip(pos, 0, n - 1).reshape(best_pos.shape[0], -1)  # (Q, C)
-    # Invalid slots (pos was -1 sentinel) clip to >=0; mask them via best_pos.
-    valid = (best_pos >= 0)[:, :, None].astype(jnp.int32)
-    valid = jnp.broadcast_to(valid, (best_pos.shape[0], best_pos.shape[1], 2 * h + 1))
-    valid = valid.reshape(best_pos.shape[0], -1)
-    # Dedup positions.
+def _expand_windows(best_pos, n: int, h: int):
+    """±h windows as (starts (Q, k2), pos (Q, k2, window), window size).
+
+    Each surviving stage-1 position expands to a CONTIGUOUS window of
+    ``window = min(2h+1, n)`` master-order rows starting at
+    ``clip(best_pos - h, 0, n - window)`` — near the array edges the window
+    shifts in-bounds instead of clamping to duplicate rows, so the candidate
+    set is always a superset of the clamped expansion.  Contiguity is what
+    lets candidate codes be read with windowed dynamic slices instead of a
+    (Q, C, d) random gather.
+    """
+    window = min(2 * h + 1, n)
+    starts = jnp.clip(best_pos - h, 0, n - window)  # (Q, k2)
+    pos = starts[:, :, None] + jnp.arange(window, dtype=jnp.int32)[None, None, :]
+    return starts, pos, window
+
+
+def _window_slices(rows: jax.Array, starts: jax.Array, window: int) -> jax.Array:
+    """Read (Q, k2) contiguous row windows: (n, W) -> (Q, k2, window, W)."""
+    return jax.vmap(
+        jax.vmap(lambda s: lax.dynamic_slice_in_dim(rows, s, window, axis=0))
+    )(starts)
+
+
+def _dedup_rank_topk(pos, d2, valid, master_order, k: int):
+    """Sort by position, mask duplicates/invalid to +inf, final top-k.
+
+    Shared tail of both stage-2 layouts: given identical (pos, d2, valid)
+    inputs the outputs are identical, which is what makes the packed and
+    unpacked search paths bit-identical on the XLA backend.
+
+    The candidate pool is ``k2 * min(2h+1, n)``, which on a tiny index (or
+    a tiny mutable segment queried with an inflated k) can be smaller than
+    ``k``; the top-k is taken over the pool and the tail padded with
+    id -1 / +inf — the same padding contract as ``brute_force_topk``.
+    """
     sort_idx = jnp.argsort(pos, axis=1)
     pos_s = jnp.take_along_axis(pos, sort_idx, axis=1)
+    d2_s = jnp.take_along_axis(d2, sort_idx, axis=1)
     valid_s = jnp.take_along_axis(valid, sort_idx, axis=1)
     dup = jnp.concatenate(
         [jnp.zeros_like(pos_s[:, :1], bool), pos_s[:, 1:] == pos_s[:, :-1]], axis=1
     )
-    keep = (~dup) & (valid_s == 1)
-
-    codes = codes_master[pos_s]  # (Q, C, d) uint8
-    d2 = quantize.adc_distance(quant, queries, codes)  # (Q, C) fp32
-    d2 = jnp.where(keep, d2, jnp.inf)
-    neg, idx = lax.top_k(-d2, k)
+    d2_s = jnp.where((~dup) & valid_s, d2_s, jnp.inf)
+    k_top = min(k, pos_s.shape[1])
+    neg, idx = lax.top_k(-d2_s, k_top)
     final_pos = jnp.take_along_axis(pos_s, idx, axis=1)
-    return master_order[final_pos], -neg
+    ids, dist = master_order[final_pos], -neg
+    if k_top < k:
+        qn, pad = ids.shape[0], k - k_top
+        ids = jnp.concatenate(
+            [ids, jnp.full((qn, pad), -1, ids.dtype)], axis=1
+        )
+        dist = jnp.concatenate(
+            [dist, jnp.full((qn, pad), jnp.inf, dist.dtype)], axis=1
+        )
+    return ids, dist
+
+
+@functools.partial(jax.jit, static_argnames=("h", "k"))
+def stage2_expand_rank(
+    queries, best_pos, codes_master, master_order, quant, *, h, k
+):
+    """±h expansion, dedup, exact ADC distance, top-k — UNPACKED codes.
+
+    ``codes_master`` is (n, d) uint8.  Kept as the parity/benchmark
+    reference for :func:`stage2_packed_windows`; both share the same
+    windowed candidate expansion and dedup/top-k tail, so on the XLA
+    backend their results are bit-identical (pack/unpack is lossless).
+    """
+    n = master_order.shape[0]
+    qn, k2 = best_pos.shape
+    starts, pos, window = _expand_windows(best_pos, n, h)
+    codes = _window_slices(codes_master, starts, window)  # (Q, k2, window, d)
+    codes = codes.reshape(qn, k2 * window, codes_master.shape[1])
+    d2 = quantize.adc_distance(quant, queries, codes)  # (Q, C) fp32
+    valid = jnp.broadcast_to((best_pos >= 0)[:, :, None], pos.shape)
+    return _dedup_rank_topk(
+        pos.reshape(qn, -1), d2, valid.reshape(qn, -1), master_order, k
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("h", "k", "use_kernels"))
+def stage2_packed_windows(
+    queries, best_pos, codes_packed, master_order, quant, *, h, k,
+    use_kernels=False,
+):
+    """Stage 2 on the RESIDENT nibble-packed codes (n, ceil(d/8)) uint32.
+
+    Candidate codes are read as contiguous ±h windowed dynamic slices of
+    the packed words (0.5 B/dim of traffic).  Distances route through
+    ``repro.kernels.qdist.qdist_windows_from_packed``: the Pallas kernel
+    when ``use_kernels`` (TPU target; interpret mode on CPU), else a packed
+    XLA path that unpacks losslessly — bit-identical to
+    :func:`stage2_expand_rank` on the same candidates.
+    """
+    n = master_order.shape[0]
+    d = quant.centroids.shape[0]
+    qn, k2 = best_pos.shape
+    starts, pos, window = _expand_windows(best_pos, n, h)
+    win = _window_slices(codes_packed, starts, window)  # (Q, k2, window, W)
+    win = win.reshape(qn, k2 * window, codes_packed.shape[1])
+    if use_kernels:
+        from repro.kernels.qdist import qdist_windows_from_packed
+
+        d2 = qdist_windows_from_packed(
+            queries, win, quant.centroids, d=d, use_kernel=True,
+            interpret=jax.default_backend() != "tpu",
+        )
+    else:
+        d2 = quantize.adc_distance_packed(quant, queries, win, d=d)
+    valid = jnp.broadcast_to((best_pos >= 0)[:, :, None], pos.shape)
+    return _dedup_rank_topk(
+        pos.reshape(qn, -1), d2, valid.reshape(qn, -1), master_order, k
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bits", "key_bits", "leaf_size", "k1", "k2", "h", "k", "use_kernels"
+    ),
+)
+def fused_search_chunk(
+    queries,
+    orders,
+    directories,
+    lo,
+    hi,
+    perms,
+    flips,
+    master_rank,
+    sketches_master,
+    codes_packed,
+    master_order,
+    quant,
+    *,
+    bits,
+    key_bits,
+    leaf_size,
+    k1,
+    k2,
+    h,
+    k,
+    use_kernels=False,
+):
+    """ONE dispatch per query chunk: sketch → scan over trees → packed stage 2.
+
+    The per-tree Python loop becomes a ``lax.scan`` over the stacked forest
+    arrays (``orders`` (T, n), ``directories`` (T, n_dir, W), ``perms``/
+    ``flips`` (T, d)), so the stage-1 cost is one XLA dispatch regardless of
+    ``n_trees``; query sketching and the packed windowed stage 2 fuse into
+    the same computation.  Results are bit-identical to the per-tree loop +
+    unpacked stage 2 (all stage-1 state is integer; stage 2 shares the same
+    candidate expansion and, on XLA, the same lossless-unpack ADC).
+    """
+    qn = queries.shape[0]
+    qsk = sketch.make_sketches(quant, queries)
+    init = (
+        jnp.full((qn, k2), -1, jnp.int32),
+        jnp.full((qn, k2), _INF, jnp.int32),
+    )
+
+    def body(carry, tree):
+        order, directory, perm, flip = tree
+        best_pos, best_dist = stage1_tree_merge(
+            queries, qsk, carry[0], carry[1],
+            order, directory, lo, hi, perm, flip,
+            master_rank, sketches_master,
+            bits=bits, key_bits=key_bits, leaf_size=leaf_size, k1=k1, k2=k2,
+            use_kernels=use_kernels,
+        )
+        return (best_pos, best_dist), None
+
+    (best_pos, _), _ = lax.scan(body, init, (orders, directories, perms, flips))
+    return stage2_packed_windows(
+        queries, best_pos, codes_packed, master_order, quant,
+        h=h, k=k, use_kernels=use_kernels,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -209,6 +392,31 @@ def brute_force_topk(queries, points, valid, *, k):
 # old callers get bit-identical results from the same jitted stages.
 # ---------------------------------------------------------------------------
 
+# The legacy container keeps codes unpacked; the facade wants them packed.
+# Cache the packed form per codes array so repeated legacy search() calls
+# don't repack the whole database every time.  Keyed by id(); a weakref
+# finalizer evicts the entry when the source array dies, so the id can
+# never be reused against a stale entry and dropped legacy indexes don't
+# pin database-sized arrays for the process lifetime.
+_PACKED_SHIM_CACHE: dict = {}
+
+
+def _packed_codes_cached(codes: jax.Array) -> jax.Array:
+    import weakref
+
+    key = id(codes)
+    hit = _PACKED_SHIM_CACHE.get(key)
+    if hit is None or hit[0]() is not codes:
+        packed = quantize.pack_codes(codes)
+        try:
+            ref = weakref.ref(codes)
+            weakref.finalize(codes, _PACKED_SHIM_CACHE.pop, key, None)
+        except TypeError:  # not weakref-able: skip caching
+            return packed
+        _PACKED_SHIM_CACHE[key] = (ref, packed)
+        hit = _PACKED_SHIM_CACHE[key]
+    return hit[1]
+
 
 def build_index(
     points: jax.Array,
@@ -228,10 +436,12 @@ def build_index(
         points,
         IndexConfig(forest=forest_cfg, quantizer=quant_cfg, store_points=False),
     )
+    # The facade stores codes nibble-packed; the legacy container documents
+    # the unpacked (n, d) uint8 layout, so unpack (lossless) on the way out.
     return HilbertForestIndex(
         forest=idx.forest,
         quant=idx.quant,
-        codes_master=idx.codes_master,
+        codes_master=quantize.unpack_codes(idx.codes_master, idx.dim),
         sketches_master=idx.sketches_master,
         master_order=idx.master_order,
         master_rank=idx.master_rank,
@@ -269,7 +479,7 @@ def search(
         ),
         forest=index.forest,
         quant=index.quant,
-        codes_master=index.codes_master,
+        codes_master=_packed_codes_cached(index.codes_master),
         sketches_master=index.sketches_master,
         master_order=index.master_order,
         master_rank=index.master_rank,

@@ -33,17 +33,25 @@ class IndexConfig:
       store_points: keep the raw fp32 points on the index.  Required for
         ``knn_graph()`` (Task-2 exact re-ranking); turn off for serving
         deployments where only Algorithm-1 search runs and RAM matters.
+      query_chunk: default search chunk cap.  Chunks are padded to
+        power-of-two buckets up to this cap, so a serving process compiles
+        at most ``log2(query_chunk)+1`` traces across all batch sizes.
+        Travels with the index so every serving worker shares the same
+        trace-bucket policy; overridable per call via
+        ``search(query_chunk=...)``.
     """
 
     forest: ForestConfig = ForestConfig()
     quantizer: QuantizerConfig = QuantizerConfig()
     store_points: bool = True
+    query_chunk: int = 2048
 
     def to_dict(self) -> Dict[str, Any]:
         return {
             "forest": dataclasses.asdict(self.forest),
             "quantizer": dataclasses.asdict(self.quantizer),
             "store_points": self.store_points,
+            "query_chunk": self.query_chunk,
         }
 
     @classmethod
@@ -54,4 +62,5 @@ class IndexConfig:
                 **_filter_fields(QuantizerConfig, d.get("quantizer", {}))
             ),
             store_points=bool(d.get("store_points", True)),
+            query_chunk=int(d.get("query_chunk", 2048)),
         )

@@ -50,7 +50,10 @@ _INF = jnp.int32(2**30)
 BACKENDS = ("auto", "xla", "pallas")
 
 # Leaf dtypes of the serialized array bundle (manifest-independent, so load
-# never trusts dtypes from disk beyond a cast to these).
+# never trusts dtypes from disk beyond a cast to these).  ``codes_master``
+# is nibble-packed uint32 since format_version 2; v1 bundles stored it
+# unpacked uint8 and are repacked transparently on load.
+_FORMAT_VERSION = 2
 _LEAF_DTYPES = {
     "forest.perms": jnp.int32,
     "forest.flips": jnp.bool_,
@@ -60,12 +63,20 @@ _LEAF_DTYPES = {
     "forest.hi": jnp.float32,
     "quant.boundaries": jnp.float32,
     "quant.centroids": jnp.float32,
-    "codes_master": jnp.uint8,
+    "codes_master": jnp.uint32,
     "sketches_master": jnp.uint32,
     "master_order": jnp.int32,
     "master_rank": jnp.int32,
     "points": jnp.float32,
 }
+
+
+def _pow2_bucket(m: int, cap: int) -> int:
+    """Smallest power of two >= m, capped at ``cap`` (the chunk size)."""
+    b = 1
+    while b < m and b < cap:
+        b <<= 1
+    return min(b, cap)
 
 
 def resolve_backend(backend: str) -> str:
@@ -85,7 +96,7 @@ class HilbertIndex:
     config: IndexConfig
     forest: forest_lib.HilbertForest
     quant: quantize.Quantizer
-    codes_master: jax.Array  # (n, d) uint8, master-order layout
+    codes_master: jax.Array  # (n, ceil(d/8)) uint32, nibble-PACKED, master order
     sketches_master: jax.Array  # (n, Ws) uint32, master-order layout
     master_order: jax.Array  # (n,) int32: position -> point id
     master_rank: jax.Array  # (n,) int32: point id -> position
@@ -117,40 +128,44 @@ class HilbertIndex:
 
     @property
     def dim(self) -> int:
-        return self.codes_master.shape[1]
+        # codes_master is packed, so its width is ceil(d/8); the quantizer
+        # grid keeps the true dimensionality.
+        return self.quant.boundaries.shape[0]
 
     def memory_report(self) -> Dict[str, int]:
         """Bytes by component: the paper's RAM-budget model plus actuals.
 
-        ``quantized_bytes``/``combined_stage2_bytes`` follow the paper's
-        4-bit-packed accounting; ``codes_bytes``/``order_bytes``/
-        ``quant_bytes`` are the arrays actually resident (codes are stored
-        unpacked uint8 on this backend), and ``resident_bytes`` /
-        ``total_bytes`` sum every pytree leaf so segment lists and serving
-        deployments can budget real RAM.
+        The model fields (``quantized_bytes``/``combined_stage2_bytes``/…)
+        come from :func:`repro.core.search.paper_memory_model` — the single
+        shared accounting.  Since codes are RESIDENT nibble-packed, the
+        model's ``quantized_bytes`` equals the actual ``codes_bytes``.
+        ``codes_bytes``/``order_bytes``/``quant_bytes`` are the arrays
+        actually resident, and ``resident_bytes``/``total_bytes`` sum every
+        pytree leaf so segment lists and serving deployments can budget
+        real RAM.
         """
         d = self.dim
-        packed_codes = self.n_points * (-(-d // 8)) * 4  # 4-bit packed
-        sketches = int(np.prod(self.sketches_master.shape)) * 4
-        shared = self.n_points * (-(-d // 32)) * 4  # MSB plane counted once
         resident = sum(
             int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
             for leaf in jax.tree_util.tree_leaves(self)
         )
-        rep = {
-            "forest_bytes": self.forest.memory_bytes(),
-            "sketch_bytes": sketches,
-            "quantized_bytes": packed_codes,
-            "shared_bit_savings": shared,
-            "combined_stage2_bytes": sketches + packed_codes - shared,
-            "points_bytes": 0 if self.points is None else self.n_points * d * 4,
-            "codes_bytes": int(np.prod(self.codes_master.shape)),  # uint8
-            "order_bytes": self.master_order.nbytes + self.master_rank.nbytes,
-            "quant_bytes": self.quant.boundaries.nbytes
-            + self.quant.centroids.nbytes,
-            "resident_bytes": resident,
-        }
-        rep["total_bytes"] = resident
+        rep = search_lib.paper_memory_model(
+            self.n_points,
+            d,
+            int(np.prod(self.sketches_master.shape)) * 4,
+            self.forest.memory_bytes(),
+        )
+        rep.update(
+            {
+                "points_bytes": 0 if self.points is None else self.n_points * d * 4,
+                "codes_bytes": int(np.prod(self.codes_master.shape)) * 4,  # u32
+                "order_bytes": self.master_order.nbytes + self.master_rank.nbytes,
+                "quant_bytes": self.quant.boundaries.nbytes
+                + self.quant.centroids.nbytes,
+                "resident_bytes": resident,
+                "total_bytes": resident,
+            }
+        )
         return rep
 
     def __repr__(self) -> str:
@@ -184,34 +199,74 @@ class HilbertIndex:
         params: SearchParams = SearchParams(),
         *,
         backend: str = "auto",
-        query_chunk: int = 2048,
+        query_chunk: Optional[int] = None,
+        fused: bool = True,
     ) -> Tuple[jax.Array, jax.Array]:
         """Batched Algorithm-1 search. Returns (ids (Q, k), sq-distances).
 
         No config argument: the forest/quantizer settings used at build time
-        travel on ``self.config``.  ``backend`` routes the stage-1 Hamming
-        filter: ``"pallas"`` uses the Mosaic kernel (interpret-mode on CPU),
-        ``"xla"`` the jnp oracle, ``"auto"`` picks Pallas only on TPU.
+        travel on ``self.config``.  ``backend`` routes the kernel stages
+        (stage-1 Hamming filter + packed stage-2 ADC): ``"pallas"`` uses the
+        Mosaic kernels (interpret-mode on CPU), ``"xla"`` the jnp oracles,
+        ``"auto"`` picks Pallas only on TPU.
+
+        ``query_chunk`` (default ``config.query_chunk``) caps the chunk
+        size; every chunk is padded up to a power-of-two bucket (≤ the cap)
+        and trimmed after, so a serving process sees at most
+        ``log2(query_chunk)+1`` jit traces no matter how batch sizes vary —
+        previously every distinct batch size below the chunk size triggered
+        a fresh trace.
+
+        ``fused=True`` (the hot path) runs one XLA dispatch per chunk via
+        :func:`repro.core.search.fused_search_chunk`; ``fused=False`` keeps
+        the per-tree dispatch loop + unpacked stage 2 as a bit-identical
+        reference for parity tests and benchmarks.
         """
         use_kernels = resolve_backend(backend) == "pallas"
-        outs_i, outs_d = [], []
+        if query_chunk is None:
+            query_chunk = self.config.query_chunk
         qn = queries.shape[0]
+        if qn == 0:  # idle decode step: no chunks, well-typed empty result
+            return (
+                jnp.zeros((0, params.k), jnp.int32),
+                jnp.zeros((0, params.k), jnp.float32),
+            )
+        # Reference path: unpack the codes ONCE per search, not per chunk.
+        codes_u8 = (
+            None if fused
+            else quantize.unpack_codes(self.codes_master, self.dim)
+        )
+        outs_i, outs_d = [], []
         for s in range(0, qn, query_chunk):
             q = queries[s : s + query_chunk]
-            pad = 0
-            if q.shape[0] < query_chunk and qn > query_chunk:
-                pad = query_chunk - q.shape[0]
-                q = jnp.pad(q, ((0, pad), (0, 0)))
-            ids, dists = self._search_chunk(q, params, use_kernels)
-            if pad:
-                ids, dists = ids[:-pad], dists[:-pad]
+            m = q.shape[0]
+            bucket = _pow2_bucket(m, query_chunk)
+            if bucket > m:
+                q = jnp.pad(q, ((0, bucket - m), (0, 0)))
+            ids, dists = self._search_chunk(q, params, use_kernels, fused,
+                                            codes_u8)
+            if bucket > m:
+                ids, dists = ids[:m], dists[:m]
             outs_i.append(ids)
             outs_d.append(dists)
         return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
 
-    def _search_chunk(self, queries, params: SearchParams, use_kernels: bool):
+    def _search_chunk(self, queries, params: SearchParams, use_kernels: bool,
+                      fused: bool = True, codes_u8=None):
         fcfg = self.config.forest
         f = self.forest
+        if fused:
+            return search_lib.fused_search_chunk(
+                queries, f.orders, f.directories, f.lo, f.hi, f.perms, f.flips,
+                self.master_rank, self.sketches_master, self.codes_master,
+                self.master_order, self.quant,
+                bits=fcfg.bits, key_bits=fcfg.key_bits,
+                leaf_size=fcfg.leaf_size, k1=params.k1, k2=params.k2,
+                h=params.h, k=params.k, use_kernels=use_kernels,
+            )
+        # Reference path: one dispatch per tree + stage 2 on codes unpacked
+        # back to (n, d) uint8.  Bit-identical to the fused path on XLA;
+        # kept for parity tests and the search_path benchmark baseline.
         qn = queries.shape[0]
         qsk = sketch.make_sketches(self.quant, queries)
         best_pos = jnp.full((qn, params.k2), -1, jnp.int32)
@@ -225,8 +280,10 @@ class HilbertIndex:
                 leaf_size=fcfg.leaf_size, k1=params.k1, k2=params.k2,
                 use_kernels=use_kernels,
             )
+        if codes_u8 is None:
+            codes_u8 = quantize.unpack_codes(self.codes_master, self.dim)
         return search_lib.stage2_expand_rank(
-            queries, best_pos, self.codes_master, self.master_order, self.quant,
+            queries, best_pos, codes_u8, self.master_order, self.quant,
             h=params.h, k=params.k,
         )
 
@@ -319,7 +376,7 @@ def save_index_bundle(
         bundle[k] = v
     extra = {
         "kind": kind,
-        "format_version": 1,
+        "format_version": _FORMAT_VERSION,
         "config": index.config.to_dict(),
         "has_points": index.points is not None,
         "n_points": int(index.n_points),
@@ -353,16 +410,23 @@ def load_index_bundle(
             f"(kind={extra.get('kind')!r})"
         )
     config = IndexConfig.from_dict(extra["config"])
+    fmt = int(extra.get("format_version", 1))
     names = list(_LEAF_DTYPES)
     if not extra.get("has_points", False):
         names.remove("points")
     abstract = {k: jax.ShapeDtypeStruct((0,), _LEAF_DTYPES[k]) for k in names}
+    if fmt < 2:
+        # v1 bundles stored codes unpacked (n, d) uint8; restore them in
+        # that dtype and repack below (transparent layout upgrade).
+        abstract["codes_master"] = jax.ShapeDtypeStruct((0,), jnp.uint8)
     extra_names = extra.get("extra_arrays", [])
     for k in extra_names:
         # manifest leaves are keyed by jax keystr: "['<name>']"
         _, dtype_str = manifest["leaves"][f"['{k}']"]
         abstract[k] = jax.ShapeDtypeStruct((0,), np.dtype(dtype_str))
     arrays, _ = checkpoint.restore(path, step, abstract)
+    if fmt < 2:
+        arrays["codes_master"] = quantize.pack_codes(arrays["codes_master"])
     index = HilbertIndex(
         config=config,
         forest=forest_lib.HilbertForest(
@@ -429,7 +493,9 @@ def build_with_timings(
         config=config,
         forest=f,
         quant=quant,
-        codes_master=codes[master_order],
+        # Resident layout is nibble-packed (paper: 0.5 B/dim); pack AFTER
+        # the master reorder so window reads stay contiguous.
+        codes_master=quantize.pack_codes(codes[master_order]),
         sketches_master=sketches[master_order],
         master_order=master_order,
         master_rank=master_rank,

@@ -102,7 +102,10 @@ class Segment:
         Two segments with equal uids hold the same points under the same
         external ids, so a save may safely skip rewriting a bundle that
         already carries this uid — even if it was written by a different
-        index instance reusing the same checkpoint path.
+        index instance reusing the same checkpoint path.  Codes are hashed
+        in their resident nibble-packed layout, so bundles written by the
+        old unpacked-uint8 format never collide with packed ones and are
+        rewritten on the first save after an upgrade.
         """
         h = hashlib.sha1()
         h.update(np.int64(self.gen).tobytes())
@@ -430,7 +433,7 @@ class MutableHilbertIndex:
         params: Optional[SearchParams] = None,
         *,
         backend: str = "auto",
-        query_chunk: int = 2048,
+        query_chunk: Optional[int] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Fan-out top-k over buffer + segments, merged exactly.
 

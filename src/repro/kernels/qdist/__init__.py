@@ -1,2 +1,10 @@
-from repro.kernels.qdist.ops import qdist, qdist_from_packed  # noqa: F401
-from repro.kernels.qdist.ref import qdist_packed_ref, qdist_u8_ref  # noqa: F401
+from repro.kernels.qdist.ops import (  # noqa: F401
+    qdist,
+    qdist_from_packed,
+    qdist_windows_from_packed,
+)
+from repro.kernels.qdist.ref import (  # noqa: F401
+    qdist_packed_ref,
+    qdist_packed_windows_ref,
+    qdist_u8_ref,
+)

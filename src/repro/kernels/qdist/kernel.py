@@ -10,7 +10,7 @@ with 16 vectorized selects (one per code level; no gathers) and computes
 with the cross term on the MXU — this is the deliberate CPU→TPU algorithm
 change recorded in DESIGN.md §2.
 
-Two variants:
+Three variants:
   * ``qdist_u8_kernel``    — codes arrive as (C, d) uint8 (VMEM feed 1 B/dim).
   * ``qdist_packed_kernel``— codes arrive nibble-packed (C, d//8) uint32
     (VMEM/HBM feed 0.5 B/dim — the memory-roofline winner at 23M
@@ -19,6 +19,11 @@ Two variants:
     ``packed_dim_order`` first; distance is order-invariant so the result
     is identical.  The cross term becomes 8 accumulated (BQ,W)@(W,BC)
     matmuls.
+  * ``qdist_packed_windows_kernel`` — the stage-2 serving shape: every query
+    brings its OWN candidate set (Q, C, d//8) uint32 (the ±h master-order
+    windows gathered by the fused search path), so the grid walks one query
+    row per program and the cross term is a (1,W)@(W,BC) row-matmul per
+    nibble.  Same packed feed, same permuted dim order.
 
 Tiling: grid (Q/BQ, C/BC); VMEM per step ≈ BQ·d·4 + BC·d (+ recon BC·d·4)
 + BQ·BC·4 ≈ 0.6 MB at (128, 128, d=384) — well inside 16 MB VMEM, sized so
@@ -71,6 +76,26 @@ def _qdist_packed_kernel(q_ref, c_ref, cent_ref, out_ref, *, levels: int):
         cent_s = jax.lax.dynamic_slice_in_dim(cents, s * w, w, axis=0)  # (W, L)
         recon = _reconstruct(nib, cent_s, levels)  # (BC, W)
         q_s = jax.lax.dynamic_slice_in_dim(q, s * w, w, axis=1)  # (BQ, W)
+        acc += jax.lax.dot_general(
+            q_s, recon, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        rsq += jnp.sum(recon * recon, axis=1, keepdims=True)
+    qsq = jnp.sum(q * q, axis=1, keepdims=True)
+    out_ref[...] = qsq - 2.0 * acc + rsq.T
+
+
+def _qdist_packed_windows_kernel(q_ref, c_ref, cent_ref, out_ref, *, levels: int):
+    q = q_ref[...]                       # (1, 8W) f32, permuted dim order
+    packed = c_ref[...][0]               # (1, BC, W) uint32 -> (BC, W)
+    cents = cent_ref[...]                # (8W, L) f32, permuted dim order
+    w = packed.shape[1]
+    acc = jnp.zeros((1, packed.shape[0]), jnp.float32)
+    rsq = jnp.zeros((packed.shape[0], 1), jnp.float32)
+    for s in range(8):
+        nib = ((packed >> jnp.uint32(4 * s)) & jnp.uint32(0xF)).astype(jnp.int32)
+        cent_s = jax.lax.dynamic_slice_in_dim(cents, s * w, w, axis=0)  # (W, L)
+        recon = _reconstruct(nib, cent_s, levels)  # (BC, W)
+        q_s = jax.lax.dynamic_slice_in_dim(q, s * w, w, axis=1)  # (1, W)
         acc += jax.lax.dot_general(
             q_s, recon, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )
@@ -148,3 +173,36 @@ def qdist_packed_kernel(
         out_shape=jax.ShapeDtypeStruct((qn, cn), jnp.float32),
         interpret=interpret,
     )(queries_perm, packed, centroids_perm)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "interpret", "bc"))
+def qdist_packed_windows_kernel(
+    queries_perm: jax.Array,
+    packed_windows: jax.Array,
+    centroids_perm: jax.Array,
+    *,
+    levels: int = 16,
+    interpret: bool = False,
+    bc: int = BC,
+) -> jax.Array:
+    """Per-query candidate windows: (Q, 8W) f32 × (Q, C, W) uint32 -> (Q, C).
+
+    Grid walks (query, candidate-tile); queries/centroids pre-permuted by
+    ``packed_dim_order`` like :func:`qdist_packed_kernel`.
+    """
+    qn, d = queries_perm.shape
+    _, cn, w = packed_windows.shape
+    assert d == 8 * w, (d, w)
+    grid = (qn, cn // bc)
+    return pl.pallas_call(
+        functools.partial(_qdist_packed_windows_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bc, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((d, levels), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, cn), jnp.float32),
+        interpret=interpret,
+    )(queries_perm, packed_windows, centroids_perm)

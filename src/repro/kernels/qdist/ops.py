@@ -13,9 +13,14 @@ from repro.kernels.qdist.kernel import (
     BQ,
     packed_dim_order,
     qdist_packed_kernel,
+    qdist_packed_windows_kernel,
     qdist_u8_kernel,
 )
-from repro.kernels.qdist.ref import qdist_packed_ref, qdist_u8_ref
+from repro.kernels.qdist.ref import (
+    qdist_packed_ref,
+    qdist_packed_windows_ref,
+    qdist_u8_ref,
+)
 
 
 def _pad_axis(x: jax.Array, m: int, axis: int) -> jax.Array:
@@ -93,3 +98,43 @@ def qdist_from_packed(
         q[:, order], p, cent[order], levels=centroids.shape[1], interpret=interpret
     )
     return out[:qn, :cn]
+
+
+@functools.partial(jax.jit, static_argnames=("d", "use_kernel", "interpret"))
+def qdist_windows_from_packed(
+    queries: jax.Array,
+    packed_windows: jax.Array,
+    centroids: jax.Array,
+    *,
+    d: int,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-query packed candidate sets — the fused stage-2 serving shape.
+
+    Args:
+      queries: (Q, D) float32.
+      packed_windows: (Q, C, ceil(D/8)) uint32 — each query's own candidate
+        codes (the ±h master-order windows), nibble-packed.
+      centroids: (D, 16) float32.
+      d: original dimensionality.
+
+    Returns: (Q, C) float32 squared distances.
+    """
+    if not use_kernel:
+        return qdist_packed_windows_ref(queries, packed_windows, centroids, d=d)
+    qn = queries.shape[0]
+    _, cn, w = packed_windows.shape
+    # Pad packed width so 8·W is a lane multiple; nibble 0 + zero centroid
+    # columns contribute nothing.  Candidate tiles pad with all-zero rows
+    # whose (finite) distances are sliced away below.
+    wp = -(-w // 16) * 16
+    dp = 8 * wp
+    q = jnp.pad(queries, ((0, 0), (0, dp - d)))
+    p = jnp.pad(packed_windows, ((0, 0), (0, (-cn) % BC), (0, wp - w)))
+    cent = jnp.pad(centroids, ((0, dp - d), (0, 0)))
+    order = jnp.asarray(packed_dim_order(dp))
+    out = qdist_packed_windows_kernel(
+        q[:, order], p, cent[order], levels=centroids.shape[1], interpret=interpret
+    )
+    return out[:, :cn]

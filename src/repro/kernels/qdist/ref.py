@@ -31,3 +31,13 @@ def qdist_packed_ref(
     codes = ((packed[:, :, None] >> shifts[None, None, :]) & jnp.uint32(0xF))
     codes = codes.reshape(packed.shape[0], -1)[:, :d].astype(jnp.uint8)
     return qdist_u8_ref(queries, codes, centroids)
+
+
+@functools.partial(jax.jit, static_argnames=("d",))
+def qdist_packed_windows_ref(
+    queries: jax.Array, packed_windows: jax.Array, centroids: jax.Array, *, d: int
+) -> jax.Array:
+    """Per-query windows oracle: (Q, D) × (Q, C, W) packed -> (Q, C)."""
+    return jax.vmap(
+        lambda q, p: qdist_packed_ref(q[None], p, centroids, d=d)[0]
+    )(queries, packed_windows)

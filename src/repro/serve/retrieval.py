@@ -92,9 +92,21 @@ class RetrievalStore:
         """(Q, d) hidden states -> (ids (Q,k), sq-dists (Q,k)).
 
         When fewer than k live entries exist, the tail is id -1 / +inf —
-        :func:`knn_lm_mix` masks those slots.
+        :func:`knn_lm_mix` masks those slots.  Lookups run the fused
+        single-dispatch path over each segment's packed-resident codes, and
+        batch sizes are bucketed to powers of two, so interactive decode
+        loops with varying batch shapes don't accumulate jit traces.
         """
         return self.index.search(queries, params)
+
+    def memory_report(self) -> dict:
+        """Serving-RAM accounting (segments + buffer + values + tombstones).
+
+        Segment codes are resident nibble-packed (0.5 B/dim), so this is
+        the number to compare against a deployment's RAM budget — the
+        paper-model fields and the actual resident bytes now agree.
+        """
+        return self.index.memory_report()
 
     def save(self, path: str) -> str:
         """Persist segments + buffer + values as ONE manifest-committed save.

@@ -14,7 +14,11 @@ from _hypothesis_compat import given, settings, st  # guarded dev-only import
 
 from repro.core import quantize
 from repro.kernels.hamming import hamming_matrix, hamming_matrix_ref
-from repro.kernels.qdist import qdist, qdist_from_packed
+from repro.kernels.qdist import (
+    qdist,
+    qdist_from_packed,
+    qdist_windows_from_packed,
+)
 from repro.kernels.qdist.ref import qdist_u8_ref
 
 RNG = np.random.default_rng(0)
@@ -105,6 +109,28 @@ def test_qdist_packed_kernel_matches_ref(q, c, d):
     )
     ref = qdist_u8_ref(queries, codes, quant.centroids)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("q,c,d", [(1, 1, 8), (3, 100, 48), (9, 130, 384), (5, 260, 128)])
+def test_qdist_windows_kernel_matches_ref(q, c, d):
+    """Per-query candidate sets (Q, C, W) — the fused stage-2 shape."""
+    data = RNG.normal(size=(q * c, d)).astype(np.float32)
+    queries = jnp.asarray(RNG.normal(size=(q, d)).astype(np.float32))
+    quant = quantize.fit(jnp.asarray(data), bits=4)
+    codes = quantize.encode(quant, jnp.asarray(data))
+    windows = jax.vmap(quantize.pack_codes)(codes.reshape(q, c, d))
+    got = qdist_windows_from_packed(
+        queries, windows, quant.centroids, d=d, use_kernel=True, interpret=True
+    )
+    per_query_ref = [
+        np.asarray(
+            qdist_u8_ref(queries[i : i + 1], codes.reshape(q, c, d)[i], quant.centroids)
+        )[0]
+        for i in range(q)
+    ]
+    np.testing.assert_allclose(
+        np.asarray(got), np.stack(per_query_ref), rtol=1e-5, atol=1e-5
+    )
 
 
 def test_qdist_zero_distance_to_self_centroids():

@@ -1,0 +1,386 @@
+"""Packed-resident code-path parity (PR 3 tentpole).
+
+The index now stores ``codes_master`` nibble-packed (n, ceil(d/8)) uint32
+and serves search through one fused dispatch per chunk.  These tests pin
+the invariants that make that safe:
+
+* pack/unpack is a lossless bijection (hypothesis property);
+* packed ADC == unpacked ADC bit-for-bit (the XLA route unpacks losslessly);
+* full ``search()`` is bit-identical between the fused packed path and the
+  per-tree-loop unpacked reference, on random AND adversarial tied-distance
+  inputs;
+* v1 (unpacked uint8) checkpoint bundles load with a transparent repack;
+* the paper memory model and the resident actuals agree after packing, and
+  a store_points=False index at d=384 lost >= 40% resident RAM vs the
+  unpacked layout;
+* power-of-two query bucketing keeps results exact at every batch size.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st  # guarded dev-only import
+
+from repro import checkpoint
+from repro.core import quantize, search as search_lib, sketch
+from repro.data import ann_datasets
+from repro.index import (
+    ForestConfig,
+    HilbertIndex,
+    IndexConfig,
+    SearchParams,
+)
+
+RNG = np.random.default_rng(0)
+
+N, D, Q = 3000, 64, 37  # Q deliberately not a power of two
+
+CFG = IndexConfig(
+    forest=ForestConfig(n_trees=4, bits=4, key_bits=256, leaf_size=16, seed=0)
+)
+SP = SearchParams(k1=16, k2=64, h=2, k=10)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    data, queries = ann_datasets.lowrank_dataset_with_queries(
+        N, Q, D, n_clusters=8, seed=0
+    )
+    return jnp.asarray(data), jnp.asarray(queries)
+
+
+@pytest.fixture(scope="module")
+def index(dataset):
+    data, _ = dataset
+    return HilbertIndex.build(data, CFG)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_resident_codes_are_packed(index):
+    assert index.codes_master.dtype == jnp.uint32
+    assert index.codes_master.shape == (N, -(-D // 8))
+    assert index.dim == D
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 60),
+    d=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip(n, d, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 16, size=(n, d), dtype=np.uint8))
+    packed = quantize.pack_codes(codes)
+    assert packed.shape == (n, -(-d // 8)) and packed.dtype == jnp.uint32
+    back = quantize.unpack_codes(packed, d)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_unpack_codes_batched_leading_shape():
+    codes = jnp.asarray(RNG.integers(0, 16, size=(24, 40), dtype=np.uint8))
+    packed = quantize.pack_codes(codes)
+    windows = packed.reshape(4, 6, -1)  # (Q, C, W)
+    back = quantize.unpack_codes(windows, 40)
+    np.testing.assert_array_equal(
+        np.asarray(back).reshape(24, 40), np.asarray(codes)
+    )
+
+
+# ---------------------------------------------------------------------------
+# packed vs unpacked ADC distance — bit identity
+# ---------------------------------------------------------------------------
+
+
+def test_adc_distance_packed_bit_identical():
+    q, c, d = 9, 33, 48
+    data = RNG.normal(size=(c, d)).astype(np.float32)
+    queries = jnp.asarray(RNG.normal(size=(q, d)).astype(np.float32))
+    quant = quantize.fit(jnp.asarray(data), bits=4)
+    codes = quantize.encode(quant, jnp.asarray(data))
+    cand = jnp.broadcast_to(codes[None], (q, c, d))  # (Q, C, d)
+    packed = jax.vmap(quantize.pack_codes)(cand)
+    got = quantize.adc_distance_packed(quant, queries, packed, d=d)
+    ref = quantize.adc_distance(quant, queries, cand)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_stage2_packed_vs_unpacked_bit_identical(dataset, index):
+    _, queries = dataset
+    fcfg = CFG.forest
+    f = index.forest
+    qsk = sketch.make_sketches(index.quant, queries)
+    best_pos = jnp.full((Q, SP.k2), -1, jnp.int32)
+    best_dist = jnp.full((Q, SP.k2), jnp.int32(2**30), jnp.int32)
+    for t in range(f.n_trees):
+        best_pos, best_dist = search_lib.stage1_tree_merge(
+            queries, qsk, best_pos, best_dist,
+            f.orders[t], f.directories[t], f.lo, f.hi, f.perms[t], f.flips[t],
+            index.master_rank, index.sketches_master,
+            bits=fcfg.bits, key_bits=fcfg.key_bits,
+            leaf_size=fcfg.leaf_size, k1=SP.k1, k2=SP.k2,
+        )
+    ids_p, d2_p = search_lib.stage2_packed_windows(
+        queries, best_pos, index.codes_master, index.master_order, index.quant,
+        h=SP.h, k=SP.k,
+    )
+    codes_u8 = quantize.unpack_codes(index.codes_master, index.dim)
+    ids_u, d2_u = search_lib.stage2_expand_rank(
+        queries, best_pos, codes_u8, index.master_order, index.quant,
+        h=SP.h, k=SP.k,
+    )
+    np.testing.assert_array_equal(np.asarray(ids_p), np.asarray(ids_u))
+    np.testing.assert_array_equal(np.asarray(d2_p), np.asarray(d2_u))
+
+
+# ---------------------------------------------------------------------------
+# full search() bit identity: fused packed vs per-tree-loop unpacked
+# ---------------------------------------------------------------------------
+
+
+def _assert_search_paths_identical(idx, queries, params):
+    ids_f, d2_f = idx.search(queries, params, backend="xla")
+    ids_r, d2_r = idx.search(queries, params, backend="xla", fused=False)
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_r))
+    np.testing.assert_array_equal(np.asarray(d2_f), np.asarray(d2_r))
+    return ids_f, d2_f
+
+
+def test_search_bit_identity_random(dataset, index):
+    _, queries = dataset
+    _assert_search_paths_identical(index, queries, SP)
+
+
+def test_search_bit_identity_adversarial_ties(dataset):
+    """Tied distances everywhere: duplicated points on a coarse lattice.
+
+    Every duplicated point produces exactly tied ADC distances, so any
+    tie-breaking divergence between the packed and unpacked paths would
+    surface here as an id mismatch.
+    """
+    data, _ = dataset
+    lattice = np.round(np.asarray(data) * 2) / 2
+    dup = np.concatenate([lattice[: N // 2], lattice[: N // 2]])  # exact dups
+    idx = HilbertIndex.build(jnp.asarray(dup.astype(np.float32)), CFG)
+    queries = jnp.asarray(dup[:29].astype(np.float32))  # queries ON the data
+    ids, d2 = _assert_search_paths_identical(idx, queries, SP)
+    assert np.isfinite(np.asarray(d2)).all()
+
+
+def test_search_bit_identity_small_n_edge_windows():
+    """n smaller than the ±h window forces the shifted-window edge logic."""
+    pts = jnp.asarray(RNG.normal(size=(7, 16)).astype(np.float32))
+    cfg = IndexConfig(
+        forest=ForestConfig(n_trees=2, bits=3, key_bits=32, leaf_size=2, seed=1)
+    )
+    idx = HilbertIndex.build(pts, cfg)
+    queries = jnp.asarray(RNG.normal(size=(5, 16)).astype(np.float32))
+    params = SearchParams(k1=4, k2=8, h=4, k=3)  # 2h+1 > n
+    ids, _ = _assert_search_paths_identical(idx, queries, params)
+    assert ((np.asarray(ids) >= 0) & (np.asarray(ids) < 7)).all()
+
+
+def test_k_larger_than_candidate_pool_pads(dataset):
+    """k > k2*min(2h+1, n): top-k runs over the pool, tail pads -1/+inf.
+
+    Regression: the shifted-window expansion shrinks the stage-2 pool to
+    ``k2*min(2h+1, n)``, which on a tiny index (or a tiny heavily-
+    tombstoned mutable segment queried with an inflated k) can fall below
+    k — this used to crash lax.top_k.
+    """
+    pts = jnp.asarray(RNG.normal(size=(3, 16)).astype(np.float32))
+    cfg = IndexConfig(
+        forest=ForestConfig(n_trees=2, bits=3, key_bits=32, leaf_size=2, seed=0)
+    )
+    idx = HilbertIndex.build(pts, cfg)
+    queries = jnp.asarray(RNG.normal(size=(4, 16)).astype(np.float32))
+    params = SearchParams(k1=4, k2=8, h=4, k=30)  # pool = 8*3 = 24 < k
+    ids, d2 = _assert_search_paths_identical(idx, queries, params)
+    ids, d2 = np.asarray(ids), np.asarray(d2)
+    assert ids.shape == (4, 30) and d2.shape == (4, 30)
+    assert (ids[:, -6:] == -1).all() and np.isinf(d2[:, -6:]).all()
+    # the 3 real points lead each row with finite distances
+    assert np.isfinite(d2[:, :3]).all()
+    assert ((ids[:, :3] >= 0) & (ids[:, :3] < 3)).all()
+
+
+def test_pallas_backend_matches_xla_ids(dataset, index):
+    """Kernel route (interpret mode on CPU) agrees with XLA on results."""
+    _, queries = dataset
+    ids_x, d2_x = index.search(queries, SP, backend="xla")
+    ids_p, d2_p = index.search(queries, SP, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(ids_x), np.asarray(ids_p))
+    np.testing.assert_allclose(
+        np.asarray(d2_x), np.asarray(d2_p), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# v1 -> v2 checkpoint upgrade
+# ---------------------------------------------------------------------------
+
+
+def _write_v1_bundle(index, path):
+    """Replicate the PR-1/2 on-disk format: unpacked uint8 codes, fmt 1."""
+    bundle = dict(index._array_bundle())
+    bundle["codes_master"] = quantize.unpack_codes(
+        index.codes_master, index.dim
+    )
+    extra = {
+        "kind": "hilbert_index",
+        "format_version": 1,
+        "config": index.config.to_dict(),
+        "has_points": index.points is not None,
+        "n_points": int(index.n_points),
+        "dim": int(index.dim),
+        "extra_arrays": [],
+    }
+    checkpoint.save(path, step=0, tree=bundle, extra=extra)
+
+
+def test_v1_bundle_loads_and_repacks(tmp_path, dataset, index):
+    _, queries = dataset
+    path = str(tmp_path / "v1")
+    _write_v1_bundle(index, path)
+    # sanity: the bundle on disk really is v1/unpacked
+    with open(os.path.join(path, "step_00000000", "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["extra"]["format_version"] == 1
+    assert manifest["leaves"]["['codes_master']"][1] == "uint8"
+
+    loaded = HilbertIndex.load(path)
+    assert loaded.codes_master.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(loaded.codes_master), np.asarray(index.codes_master)
+    )
+    ids, d2 = index.search(queries, SP)
+    ids2, d22 = loaded.search(queries, SP)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids2))
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d22))
+
+
+def test_v2_roundtrip_stays_packed(tmp_path, index):
+    path = str(tmp_path / "v2")
+    index.save(path)
+    step = checkpoint.latest_step(path)
+    with open(os.path.join(path, f"step_{step:08d}", "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["extra"]["format_version"] == 2
+    assert manifest["leaves"]["['codes_master']"][1] == "uint32"
+    loaded = HilbertIndex.load(path)
+    np.testing.assert_array_equal(
+        np.asarray(loaded.codes_master), np.asarray(index.codes_master)
+    )
+
+
+# ---------------------------------------------------------------------------
+# memory accounting
+# ---------------------------------------------------------------------------
+
+
+def test_paper_model_matches_resident_actuals(index):
+    rep = index.memory_report()
+    assert rep["quantized_bytes"] == rep["codes_bytes"]
+    # the shared helper IS the legacy container's report
+    legacy = search_lib.paper_memory_model(
+        index.n_points, index.dim,
+        int(np.prod(index.sketches_master.shape)) * 4,
+        index.forest.memory_bytes(),
+    )
+    for key, val in legacy.items():
+        assert rep[key] == val
+
+
+def test_resident_bytes_drop_at_paper_dim():
+    """store_points=False at d=384: packing must save >= 40% resident RAM."""
+    n, d = 12000, 384
+    data = ann_datasets.lowrank_embeddings(n, d, n_clusters=16, seed=2)
+    cfg = IndexConfig(
+        forest=ForestConfig(n_trees=4, bits=4, key_bits=448, leaf_size=32),
+        store_points=False,
+    )
+    idx = HilbertIndex.build(jnp.asarray(data), cfg)
+    rep = idx.memory_report()
+    assert rep["points_bytes"] == 0
+    # what the same index cost when codes were resident unpacked uint8
+    unpacked_baseline = rep["resident_bytes"] - rep["codes_bytes"] + n * d
+    drop = 1.0 - rep["resident_bytes"] / unpacked_baseline
+    assert drop >= 0.40, f"resident drop {drop:.1%} < 40%"
+
+
+# ---------------------------------------------------------------------------
+# pow2 bucketing (serving recompile hazard)
+# ---------------------------------------------------------------------------
+
+
+def test_bucketed_batches_exact_at_every_size(dataset, index):
+    _, queries = dataset
+    full_ids, full_d2 = index.search(queries, SP)
+    for m in (1, 2, 3, 5, 8, 13, 21, Q):
+        ids, d2 = index.search(queries[:m], SP)
+        np.testing.assert_array_equal(
+            np.asarray(ids), np.asarray(full_ids[:m])
+        )
+        np.testing.assert_array_equal(np.asarray(d2), np.asarray(full_d2[:m]))
+
+
+def test_pow2_bucket_policy():
+    from repro.index.facade import _pow2_bucket
+
+    assert _pow2_bucket(1, 2048) == 1
+    assert _pow2_bucket(3, 2048) == 4
+    assert _pow2_bucket(33, 2048) == 64
+    assert _pow2_bucket(2048, 2048) == 2048
+    assert _pow2_bucket(1500, 2048) == 2048
+    assert _pow2_bucket(5, 4) == 4  # cap wins
+
+
+def test_empty_query_batch(dataset, index):
+    """An idle decode step (0 queries) returns well-typed (0, k) results."""
+    _, queries = dataset
+    ids, d2 = index.search(queries[:0], SP)
+    assert np.asarray(ids).shape == (0, SP.k)
+    assert np.asarray(d2).shape == (0, SP.k)
+    assert np.asarray(ids).dtype == np.int32
+
+
+def test_legacy_shim_pack_cache_evicts():
+    """The legacy-shim pack cache drops entries when the index dies."""
+    import gc
+    import warnings
+
+    from repro.core.search import _PACKED_SHIM_CACHE
+
+    data = jnp.asarray(RNG.normal(size=(300, 16)).astype(np.float32))
+    queries = jnp.asarray(RNG.normal(size=(4, 16)).astype(np.float32))
+    fcfg = ForestConfig(n_trees=2, bits=3, key_bits=32, leaf_size=4, seed=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for _ in range(3):
+            legacy = search_lib.build_index(data, fcfg)
+            search_lib.search(
+                legacy, queries, SearchParams(k1=4, k2=8, h=1, k=3), fcfg
+            )
+            search_lib.search(  # second call hits the cache
+                legacy, queries, SearchParams(k1=4, k2=8, h=1, k=3), fcfg
+            )
+            del legacy
+            gc.collect()
+    assert len(_PACKED_SHIM_CACHE) == 0
+
+
+def test_chunked_equals_unchunked(dataset, index):
+    _, queries = dataset
+    ids_a, d2_a = index.search(queries, SP, query_chunk=8)
+    ids_b, d2_b = index.search(queries, SP)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_array_equal(np.asarray(d2_a), np.asarray(d2_b))
