@@ -11,6 +11,9 @@ API (build once → search / knn_graph off the same artifact).
   churn    — streaming insert/delete/search on the mutable index
   search   — fused packed search path vs per-tree-loop reference
              (emits BENCH_search.json)
+  sharded  — row-partitioned shard_map search vs single-device
+             (emits BENCH_sharded.json; re-execs itself with 8
+             simulated devices)
 
 ``python -m benchmarks.run [names...]`` (default: all).
 """
@@ -21,7 +24,7 @@ import time
 
 def main() -> None:
     names = sys.argv[1:] or ["kernels", "hsort", "phases", "table2", "table1",
-                             "churn", "search"]
+                             "churn", "search", "sharded"]
     t00 = time.time()
     for name in names:
         print(f"\n===== {name} =====", flush=True)
@@ -40,6 +43,8 @@ def main() -> None:
             from benchmarks import churn as m
         elif name == "search":
             from benchmarks import search_path as m
+        elif name == "sharded":
+            from benchmarks import sharded_search as m
         else:
             raise SystemExit(f"unknown benchmark {name!r}")
         m.main()

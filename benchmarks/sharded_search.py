@@ -1,0 +1,158 @@
+"""Sharded-search benchmark: per-shard vs merged latency, residency split.
+
+Quantifies the PR-4 tentpole so the scaling trajectory is machine-readable:
+
+* **latency** — p50/p99 per-batch wall time for (a) the single-device fused
+  path over the full corpus, (b) the shard-local core alone (one fused
+  search over a corpus of n/S rows — the per-device work), and (c) the
+  mesh-wide sharded path (shard_map fused per-shard search + cross-shard
+  ``merge_topk``), all after jit warmup;
+* **dispatches per chunk** — structural: both the single fused path and the
+  WHOLE sharded pipeline (8 per-shard searches + all_gather + merge) cost
+  exactly ONE XLA dispatch per query chunk (asserted, not assumed);
+* **resident bytes** — total vs per-device residency of the sharded layout
+  (the row-partition is what divides the paper's 16 GB single-box budget
+  across the mesh).
+
+Results land in ``BENCH_sharded.json`` (cwd).  ``--smoke`` shrinks to CI
+scale; also runnable via ``python -m benchmarks.run sharded``.
+
+The measurement runs in a re-exec'd subprocess with
+``--xla_force_host_platform_device_count=8`` so it works from any parent
+process (``benchmarks.run`` has usually initialized jax single-device
+already); on a host that already has multiple real devices the flag is
+harmless — it only affects the CPU platform.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+_WORKER_ENV = "_SHARDED_BENCH_WORKER"
+
+
+def main(smoke: bool = False) -> dict:
+    if os.environ.get(_WORKER_ENV) != "1":
+        env = dict(os.environ)
+        env[_WORKER_ENV] = "1"
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8"
+        ).strip()
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (os.path.join(root, "src"),
+                        env.get("PYTHONPATH", "")) if p
+        )
+        cmd = [sys.executable, "-m", "benchmarks.sharded_search"]
+        if smoke:
+            cmd.append("--smoke")
+        r = subprocess.run(cmd, env=env, cwd=os.getcwd())
+        if r.returncode != 0:
+            raise SystemExit(f"sharded bench worker failed ({r.returncode})")
+        with open("BENCH_sharded.json") as f:
+            return json.load(f)
+    return _worker(smoke)
+
+
+def _worker(smoke: bool) -> dict:
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.data import ann_datasets
+    from repro.index import (
+        ForestConfig,
+        HilbertIndex,
+        IndexConfig,
+        SearchParams,
+        ShardedHilbertIndex,
+    )
+    from repro.launch.mesh import data_mesh
+
+    n_shards = min(8, jax.device_count())
+    if smoke:
+        n, d, q, reps = 8192, 48, 128, 5
+        fcfg = ForestConfig(n_trees=4, bits=4, key_bits=192, leaf_size=16)
+        params = SearchParams(k1=16, k2=64, h=2, k=10)
+    else:
+        n, d, q, reps = 65536, 192, 512, 20
+        fcfg = ForestConfig(n_trees=8, bits=4, key_bits=384, leaf_size=32)
+        params = SearchParams(k1=48, k2=192, h=2, k=30)
+    cfg = IndexConfig(forest=fcfg, store_points=False)
+    data, queries = ann_datasets.lowrank_dataset_with_queries(
+        n, q, d, n_clusters=32, seed=0
+    )
+    queries = jnp.asarray(queries)
+
+    def timed(search):
+        search()  # warm the jit cache
+        out = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            ids, _ = search()
+            jnp.asarray(ids).block_until_ready()
+            out.append(time.perf_counter() - t0)
+        s = np.sort(np.asarray(out))
+        return {
+            "p50_ms": 1000 * float(s[int(0.50 * (len(s) - 1))]),
+            "p99_ms": 1000 * float(s[int(0.99 * (len(s) - 1))]),
+            "qps": q / float(s[int(0.50 * (len(s) - 1))]),
+        }
+
+    single = HilbertIndex.build(jnp.asarray(data), cfg)
+    lat_single = timed(lambda: single.search(queries, params))
+
+    local_n = -(-n // n_shards)
+    shard_local = HilbertIndex.build(jnp.asarray(data[:local_n]), cfg)
+    lat_local = timed(lambda: shard_local.search(queries, params))
+
+    sharded = ShardedHilbertIndex.build(
+        jnp.asarray(data), cfg, mesh=data_mesh(n_shards)
+    )
+    lat_sharded = timed(lambda: sharded.search(queries, params))
+    sharded.search(queries, params)
+    assert sharded.last_dispatch_count == 1  # whole pipeline, one dispatch
+
+    rep = sharded.memory_report()
+    result = {
+        "n": n,
+        "d": d,
+        "q": q,
+        "n_shards": n_shards,
+        "n_trees": fcfg.n_trees,
+        "params": {"k1": params.k1, "k2": params.k2, "h": params.h,
+                   "k": params.k},
+        "latency": {
+            "single_device_full": lat_single,
+            "shard_local_core": lat_local,
+            "sharded_merged": lat_sharded,
+        },
+        "dispatches_per_chunk": {
+            "single_device_fused": 1,
+            "sharded_merged": sharded.last_dispatch_count,
+        },
+        "resident_bytes": {
+            "sharded_total": rep["resident_bytes"],
+            "per_device": rep["per_device_bytes"][0],
+            "replicated": rep["replicated_bytes"],
+            "per_device_over_total": (
+                rep["per_device_bytes"][0] / rep["resident_bytes"]
+            ),
+            "single_device_baseline": (
+                single.memory_report()["resident_bytes"]
+            ),
+        },
+    }
+    with open("BENCH_sharded.json", "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    print("\nwrote BENCH_sharded.json", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -21,8 +21,10 @@ from repro.core import distributed, hilbert, knn_graph
 from repro.core.types import ForestConfig, GraphParams
 from repro.data import ann_datasets
 
+from repro.launch.mesh import data_mesh
+
 assert len(jax.devices()) == 8, jax.devices()
-mesh = jax.make_mesh((8,), ("data",))
+mesh = data_mesh(8)
 
 N, D = 4096, 96
 cfg = ForestConfig(bits=4, key_bits=192, leaf_size=32)

@@ -1,0 +1,230 @@
+"""Self-test for repro.index.sharded on 8 simulated devices.
+
+Run via: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+             python scripts/sharded_check.py
+(tests/test_sharded.py spawns this as a subprocess so the main pytest
+process keeps its single-device view.)
+
+Checks, in order:
+  1. hilbert_partition (sample-sort path) concatenates to the global
+     master Hilbert order.
+  2. Multi-shard search is set-equivalent to single-device search on the
+     same data under pool-saturating params (both exact → same id sets,
+     same sorted distances bit-for-bit), in ONE jitted dispatch per chunk.
+  3. Non-divisible n and fully-empty shards (sentinel-free padding):
+     still set-equivalent; padding duplicates merge away.
+  4. memory_report per-device bytes ≈ total/n_shards, cross-checked
+     against the arrays' actual addressable shards.
+  5. v3 checkpoints: same-count reload bit-equal; 8→1 reshard
+     bit-identical to the single-device fused path; v2 single-index
+     bundle adopted + resharded to 8.
+  6. Sharded RetrievalStore: kNN-LM lookups through the merged top-k,
+     save/load round-trip.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+).strip()
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed
+from repro.core.search import hilbert_master_sort
+from repro.data import ann_datasets
+from repro.index import (
+    ForestConfig,
+    HilbertIndex,
+    IndexConfig,
+    SearchParams,
+    ShardedHilbertIndex,
+    build_auto,
+)
+from repro.launch.mesh import data_mesh
+from repro.serve.retrieval import RetrievalStore, knn_lm_mix
+
+assert len(jax.devices()) == 8, jax.devices()
+
+N, D, Q = 2048, 24, 16
+CFG = IndexConfig(
+    forest=ForestConfig(n_trees=2, bits=4, key_bits=96, leaf_size=16, seed=0)
+)
+# Pool-saturating params: stage 1 covers every row on both layouts, so both
+# searches are exact over the same globally-quantized ADC distances and the
+# result id sets must coincide (ties aside — the data is continuous random,
+# so exact distance ties are measure-zero).
+SP = SearchParams(k1=N, k2=N, h=1, k=10)
+
+data, queries = ann_datasets.lowrank_dataset_with_queries(
+    N, Q, D, n_clusters=8, seed=0
+)
+data = np.asarray(data)
+queries = jnp.asarray(queries)
+
+
+def assert_set_equal(ids_a, ids_b, label):
+    for ra, rb in zip(np.asarray(ids_a), np.asarray(ids_b)):
+        sa = set(ra[ra >= 0].tolist())
+        sb = set(rb[rb >= 0].tolist())
+        assert sa == sb, (label, sorted(sa ^ sb))
+    print(f"OK: {label}")
+
+
+# --- 1. sample-sort partition == global master order ----------------------
+parts = distributed.hilbert_partition(jnp.asarray(data), CFG.forest)
+ref_order, _ = hilbert_master_sort(
+    jnp.asarray(data), CFG.forest,
+    jnp.min(jnp.asarray(data), axis=0), jnp.max(jnp.asarray(data), axis=0),
+)
+got = np.concatenate(parts)
+assert sorted(got.tolist()) == list(range(N))
+# equal-key ties may order differently between the two sorts; compare keys
+# via positions: both orders must agree wherever keys are unique, which the
+# continuous data guarantees almost surely — assert exact match.
+np.testing.assert_array_equal(got, np.asarray(ref_order))
+print("OK: hilbert_partition (sample sort) matches master Hilbert order")
+
+# --- 2. multi-shard set-equivalence + single dispatch per chunk -----------
+sharded = build_auto(jnp.asarray(data), CFG)
+assert isinstance(sharded, ShardedHilbertIndex) and sharded.n_shards == 8
+single = HilbertIndex.build(jnp.asarray(data), CFG)
+
+ids_s, d2_s = sharded.search(queries, SP)
+assert sharded.last_dispatch_count == 1, sharded.last_dispatch_count
+ids_1, d2_1 = single.search(queries, SP)
+assert_set_equal(ids_s, ids_1, "8-shard search set-equivalent to 1-device")
+np.testing.assert_array_equal(
+    np.sort(np.asarray(d2_s), axis=1), np.sort(np.asarray(d2_1), axis=1)
+)
+print("OK: sorted distances bit-equal across layouts")
+
+# chunked: one jitted dispatch per chunk, results unchanged
+ids_c, _ = sharded.search(queries, SP, query_chunk=4)
+assert sharded.last_dispatch_count == 4, sharded.last_dispatch_count
+np.testing.assert_array_equal(np.asarray(ids_c), np.asarray(ids_s))
+print("OK: one dispatch per query chunk (4 chunks -> 4 dispatches)")
+
+# no duplicate ids in any result row (padding rows merged away)
+for row in np.asarray(ids_s):
+    live = row[row >= 0]
+    assert len(set(live.tolist())) == len(live), row
+
+# --- 3. non-divisible n + fully-empty shards ------------------------------
+for n_odd in (N + 3, 11):  # 11 over 8 shards: n_pad=2, shards 6..7 empty
+    d_odd = np.asarray(
+        ann_datasets.lowrank_embeddings(n_odd, D, n_clusters=4, r=4, seed=2)
+    )
+    sp_odd = SearchParams(k1=n_odd, k2=n_odd, h=1, k=min(10, n_odd))
+    sh_odd = ShardedHilbertIndex.build(jnp.asarray(d_odd), CFG)
+    si_odd = HilbertIndex.build(jnp.asarray(d_odd), CFG)
+    io_s, _ = sh_odd.search(queries, sp_odd)
+    io_1, _ = si_odd.search(queries, sp_odd)
+    assert_set_equal(
+        io_s, io_1,
+        f"n={n_odd} (pads={sh_odd.pad_max}, "
+        f"empty={int((sh_odd.n_valid == 0).sum())}) set-equivalent",
+    )
+
+# --- 4. per-device resident bytes ≈ total / n_shards ----------------------
+rep = sharded.memory_report()
+per_dev = rep["per_device_bytes"][0]
+assert abs(per_dev - (rep["sharded_bytes"] / 8 + rep["replicated_bytes"])) <= 8
+# cross-check the model against physical placement: every stacked leaf
+# must put exactly 1/8 of its bytes on each device.
+leaves = list(sharded.stack) + (
+    [sharded.points] if sharded.points is not None else []
+)
+measured = {}
+for leaf in leaves:
+    for s in leaf.addressable_shards:
+        measured[s.device] = measured.get(s.device, 0) + s.data.nbytes
+assert len(measured) == 8
+for dev, nbytes in measured.items():
+    assert nbytes == rep["sharded_bytes"] // 8, (dev, nbytes)
+frac = per_dev / rep["resident_bytes"]
+assert frac < 0.2, frac  # ~1/8 plus small replicated overhead
+print(f"OK: per-device residency measured == model ({per_dev} B/device, "
+      f"{frac:.3f} of total)")
+
+# --- 5. v3 checkpoints: reload, reshard, v2 adoption ----------------------
+with tempfile.TemporaryDirectory() as tmp:
+    p3 = os.path.join(tmp, "v3")
+    sharded.save(p3)
+    re8 = ShardedHilbertIndex.load(p3)  # default mesh: 8 devices
+    i8, d8 = re8.search(queries, SP)
+    np.testing.assert_array_equal(np.asarray(i8), np.asarray(ids_s))
+    np.testing.assert_array_equal(np.asarray(d8), np.asarray(d2_s))
+    print("OK: v3 reload at same shard count is bit-equal")
+
+    re1 = ShardedHilbertIndex.load(p3, mesh=data_mesh(1))
+    i1, d1 = re1.search(queries, SP)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(ids_1))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2_1))
+    print("OK: 8->1 reshard-on-load bit-identical to 1-device fused search")
+
+    p2 = os.path.join(tmp, "v2")
+    single.save(p2)  # a plain format_version-2 single-index bundle
+    adopted = ShardedHilbertIndex.load(p2)  # resharded onto 8 devices
+    assert adopted.n_shards == 8
+    ia, _ = adopted.search(queries, SP)
+    assert_set_equal(ia, ids_1, "v2 bundle adopted + resharded to 8")
+
+# --- 6. sharded retrieval serving -----------------------------------------
+rng = np.random.default_rng(0)
+V = 64
+vals = jnp.asarray(rng.integers(0, V, N).astype(np.int32))
+store = RetrievalStore.build(jnp.asarray(data), vals, CFG, shards=8)
+assert store.is_sharded
+sp_serve = SearchParams(k1=32, k2=64, h=1, k=8)
+ids_r, _ = store.lookup(jnp.asarray(data[:4]), sp_serve)
+assert int(np.asarray(ids_r)[0, 0]) == 0  # self-hit rank 0
+logits = jnp.asarray(rng.normal(size=(4, V)).astype(np.float32))
+logp = knn_lm_mix(logits, jnp.asarray(data[:4]), store, sp_serve)
+assert np.isfinite(np.asarray(logp)).all()
+srep = store.memory_report()
+assert srep["per_device_bytes"][0] < srep["resident_bytes"] / 4
+with tempfile.TemporaryDirectory() as tmp:
+    sp_path = os.path.join(tmp, "store")
+    store.save(sp_path)
+    lo = RetrievalStore.load(sp_path)
+    assert lo.is_sharded
+    i2, _ = lo.lookup(jnp.asarray(data[:4]), sp_serve)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(ids_r))
+
+    # repeated in-place saves version the values bundle (never rewriting
+    # the step the previous manifest references) and prune stale steps
+    store.save(sp_path)
+    store.save(sp_path)
+    steps = sorted(
+        n for n in os.listdir(os.path.join(sp_path, "store_values"))
+        if n.startswith("step_")
+    )
+    assert len(steps) <= 2, steps
+    assert RetrievalStore.load(sp_path).is_sharded
+
+    # loading onto a smaller mesh reshards; the resulting config follows
+    # the mesh (stale config.shards from the build mesh is dropped)
+    lo1 = RetrievalStore.load(sp_path, mesh=data_mesh(1))
+    assert lo1.sharded.n_shards == 1
+    assert lo1.sharded.config.shards is None
+
+    # rebuild-and-swap over an OLD MUTABLE save: the sharded save must
+    # shadow the stale mutable manifest, or loaders would silently serve
+    # the pre-rebuild corpus
+    swap_path = os.path.join(tmp, "swap")
+    old = RetrievalStore.build(jnp.asarray(data[:256]), vals[:256], CFG)
+    old.save(swap_path)
+    store.save(swap_path)
+    swapped = RetrievalStore.load(swap_path)
+    assert swapped.is_sharded and swapped.sharded.n_points == N
+    # ...and switching back to mutable shadows the sharded manifest
+    old.save(swap_path)
+    back = RetrievalStore.load(swap_path)
+    assert not back.is_sharded and back.index.n_live == 256
+print("OK: sharded RetrievalStore serves merged kNN-LM lookups + round-trips")
+
+print("ALL SHARDED CHECKS PASSED")

@@ -130,6 +130,18 @@ def _level_pass(x: jax.Array, level: int, reverse: bool) -> jax.Array:
     return jnp.concatenate([x0_new[:, None], body_new], axis=1)
 
 
+def _prefix_xor(x: jax.Array) -> jax.Array:
+    """Inclusive prefix-XOR over axis 1 via Hillis-Steele doubling."""
+    n, d = x.shape
+    s = 1
+    while s < d:
+        x = x ^ jnp.concatenate(
+            [jnp.zeros((n, s), x.dtype), x[:, :-s]], axis=1
+        )
+        s <<= 1
+    return x
+
+
 def axes_to_transpose(coords: jax.Array, bits: int) -> jax.Array:
     """Skilling's AxesToTranspose, vectorized over points.
 
@@ -149,7 +161,12 @@ def axes_to_transpose(coords: jax.Array, bits: int) -> jax.Array:
         x = _level_pass(x, level, reverse=False)
 
     # --- Gray encode: X[i] ^= X[i-1] (already-updated) == prefix-XOR. ---
-    x = lax.associative_scan(jnp.bitwise_xor, x, axis=1)
+    # Hillis-Steele doubling instead of ``lax.associative_scan``: when the
+    # associative scan is fused with ``_level_pass`` under jit, XLA:CPU
+    # miscompiles the composition (observed at d=2, bits=2, jax 0.4.37:
+    # jitted keys disagree with op-by-op eval and collide).  Same O(log d)
+    # depth, no scan primitive for the fuser to mangle.
+    x = _prefix_xor(x)
     t = jnp.zeros((n,), jnp.uint32)
     last = x[:, -1]
     for level in range(bits - 1, 0, -1):

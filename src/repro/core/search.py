@@ -62,6 +62,7 @@ __all__ = [
     "stage2_expand_rank",
     "stage2_packed_windows",
     "fused_search_chunk",
+    "merge_topk",
     "brute_force_topk",
     "paper_memory_model",
 ]
@@ -366,6 +367,66 @@ def fused_search_chunk(
         queries, best_pos, codes_packed, master_order, quant,
         h=h, k=k, use_kernels=use_kernels,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk(ids, dists, *, k):
+    """Associative cross-source top-k merge over (id, distance) candidates.
+
+    The one merge shared by every fan-out search path: the sharded index
+    merges per-shard top-k's (queries replicated, rows sharded), and the
+    mutable index merges per-segment + write-buffer top-k's.  Top-k of a
+    union is associative, so merging per-source top-k's is exact.
+
+    Args:
+      ids: (Q, C) int32 candidate ids; ``-1`` marks a padding slot.
+      dists: (Q, C) float distances; non-finite entries are masked out.
+      k: results per query (static).
+
+    Returns:
+      (ids (Q, k) int32, dists (Q, k)) sorted by ascending distance.
+
+    Contract details, relied on by the call sites:
+      * **Dedup by id**: the same id appearing in several sources (a point
+        duplicated across shard boundaries as sentinel padding, or a stale
+        row surviving mutable-index compaction) is kept once, at its
+        SMALLEST distance; among equal distances the earliest input column
+        wins.
+      * **Column-stable tie order**: survivors keep their original column
+        positions for the final ``lax.top_k``, so equal-distance results
+        rank by input column order — a single already-sorted source passes
+        through bit-identically (the mutable index's single-segment case).
+      * **Padding**: when fewer than ``k`` finite candidates exist, the
+        tail is id -1 / distance +inf — the same contract as
+        :func:`brute_force_topk` and the stage-2 pipeline.
+    """
+    qn, c = ids.shape
+    # Locate duplicates without reordering: stable-lexsort each row by
+    # (id primary, dist secondary), mark all but the first entry of every
+    # equal-id run, and scatter the mask back to the original columns.
+    order = jnp.lexsort((dists, ids), axis=1)
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    dup_s = jnp.concatenate(
+        [jnp.zeros_like(ids_s[:, :1], bool), ids_s[:, 1:] == ids_s[:, :-1]],
+        axis=1,
+    )
+    rows = jnp.arange(qn, dtype=jnp.int32)[:, None]
+    dup = jnp.zeros(ids.shape, bool).at[rows, order].set(dup_s)
+    d = jnp.where(dup | (ids < 0) | ~jnp.isfinite(dists), jnp.inf, dists)
+    k_top = min(k, c)
+    neg, idx = lax.top_k(-d, k_top)
+    out_ids = jnp.take_along_axis(ids, idx, axis=1)
+    out_d = -neg
+    out_ids = jnp.where(jnp.isfinite(out_d), out_ids, -1)
+    if k_top < k:
+        pad = k - k_top
+        out_ids = jnp.concatenate(
+            [out_ids, jnp.full((qn, pad), -1, out_ids.dtype)], axis=1
+        )
+        out_d = jnp.concatenate(
+            [out_d, jnp.full((qn, pad), jnp.inf, out_d.dtype)], axis=1
+        )
+    return out_ids, out_d
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

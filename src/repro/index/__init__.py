@@ -18,6 +18,16 @@ compaction riding the paper's fast Hilbert-sort build path::
     hits, d2 = mut.search(queries, SearchParams(k=30))
     mut.compact()                       # merge segments, drop tombstones
 
+When the corpus outgrows one device's RAM, the row-partitioned facade
+:class:`repro.index.ShardedHilbertIndex` (:mod:`repro.index.sharded`)
+spreads the forest over the mesh's ``data`` axis — per-shard fused search
+inside ``shard_map`` merged by an associative cross-shard top-k, one
+jitted dispatch per query chunk.  :func:`repro.index.build_auto` picks the
+right facade for the host::
+
+    index = build_auto(points, IndexConfig())   # sharded iff >1 device
+    ids, d2 = index.search(queries, SearchParams(k=30))
+
 Legacy entry points (``repro.core.search.build_index/search`` and
 ``repro.core.knn_graph.build_knn_graph``) are deprecation shims over this
 package for one release.
@@ -44,9 +54,15 @@ from repro.index.mutable import (  # noqa: F401
     load_mutable_bundle,
     save_mutable_bundle,
 )
+from repro.index.sharded import (  # noqa: F401
+    ShardedHilbertIndex,
+    build_auto,
+)
 
 __all__ = [
     "HilbertIndex",
+    "ShardedHilbertIndex",
+    "build_auto",
     "MutableHilbertIndex",
     "Segment",
     "IndexConfig",

@@ -10,7 +10,7 @@ index is self-describing: no caller ever re-supplies the build config.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 from repro.core.types import ForestConfig, QuantizerConfig
 
@@ -39,12 +39,18 @@ class IndexConfig:
         Travels with the index so every serving worker shares the same
         trace-bucket policy; overridable per call via
         ``search(query_chunk=...)``.
+      shards: row-partition count for the sharded facade.  ``None`` (the
+        default) means "auto": :func:`repro.index.build_auto` picks one
+        shard per device on the mesh's ``data`` axis when more than one
+        device is visible, else a plain single-device index.  ``1`` forces
+        single-device even on a multi-device host.
     """
 
     forest: ForestConfig = ForestConfig()
     quantizer: QuantizerConfig = QuantizerConfig()
     store_points: bool = True
     query_chunk: int = 2048
+    shards: Optional[int] = None
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -52,10 +58,12 @@ class IndexConfig:
             "quantizer": dataclasses.asdict(self.quantizer),
             "store_points": self.store_points,
             "query_chunk": self.query_chunk,
+            "shards": self.shards,
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "IndexConfig":
+        shards = d.get("shards")
         return cls(
             forest=ForestConfig(**_filter_fields(ForestConfig, d.get("forest", {}))),
             quantizer=QuantizerConfig(
@@ -63,4 +71,5 @@ class IndexConfig:
             ),
             store_points=bool(d.get("store_points", True)),
             query_chunk=int(d.get("query_chunk", 2048)),
+            shards=None if shards is None else int(shards),
         )

@@ -451,12 +451,20 @@ def load_index_bundle(
 
 
 def build_with_timings(
-    points: jax.Array, config: Optional[IndexConfig] = None
+    points: jax.Array, config: Optional[IndexConfig] = None,
+    *, quant: Optional[quantize.Quantizer] = None,
 ) -> Tuple[HilbertIndex, Dict[str, float]]:
     """Build an index and return per-phase wall times (paper §3.2 split).
 
     Phases: ``quantization`` (fit+encode), ``sketches``, ``forest`` (the
     dominant cost — n_trees Hilbert sorts), ``master_sort``.
+
+    ``quant`` may supply a pre-fit quantizer instead of fitting one from
+    ``points``.  The sharded facade builds every shard with ONE globally
+    fit quantizer this way: per-shard ADC distances then dequantize against
+    the same centroids, so distances merged across shards are mutually
+    comparable and equal to what a single-device index over the union
+    would compute.
     """
     if config is None:
         config = IndexConfig()
@@ -465,7 +473,10 @@ def build_with_timings(
     timings: Dict[str, float] = {}
 
     t0 = time.time()
-    quant = quantize.fit(points, bits=qcfg.bits, sample_limit=qcfg.sample_limit)
+    if quant is None:
+        quant = quantize.fit(
+            points, bits=qcfg.bits, sample_limit=qcfg.sample_limit
+        )
     codes = quantize.encode(quant, points)
     jax.block_until_ready(codes)
     timings["quantization"] = time.time() - t0

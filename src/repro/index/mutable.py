@@ -63,9 +63,25 @@ from repro.index.facade import (
 __all__ = [
     "MutableHilbertIndex",
     "Segment",
+    "dense_values_at",
     "load_mutable_bundle",
     "save_mutable_bundle",
 ]
+
+
+def dense_values_at(values: np.ndarray, ids, fill=0) -> jax.Array:
+    """Gather rows of a dense by-id ``values`` array for search-result ids.
+
+    The one -1-slot masking gather both serving layouts share: ``ids`` may
+    contain ``-1`` padding (fewer than k hits), which surfaces as ``fill``;
+    other ids are clipped into range.  Broadcasting handles values of any
+    trailing shape (scalar tokens or vector payloads).
+    """
+    idn = np.asarray(jax.device_get(ids))
+    safe = np.clip(idn, 0, values.shape[0] - 1)
+    out = values[safe]
+    mask = (idn >= 0).reshape(idn.shape + (1,) * (out.ndim - idn.ndim))
+    return jnp.asarray(np.where(mask, out, fill))
 
 _MANIFEST = "mutable_manifest.json"
 _SEGMENT_KIND = "mutable_segment"
@@ -494,17 +510,14 @@ class MutableHilbertIndex:
             )
         ids = np.concatenate(parts_ids, axis=1)
         d2 = np.concatenate(parts_d, axis=1)
+        # Tombstone masking stays host-side (the dense alive mask is numpy);
+        # the dedup + rank + pad tail is the shared associative merge — the
+        # same `merge_topk` the sharded index uses across shards.
         dead = ~self._alive[np.clip(ids, 0, max(self._next_id - 1, 0))]
-        d2 = np.where(np.isfinite(d2) & ~dead, d2, np.inf)
-        if ids.shape[1] < k:
-            pad = k - ids.shape[1]
-            ids = np.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
-            d2 = np.pad(d2, ((0, 0), (0, pad)), constant_values=np.inf)
-        order = np.argsort(d2, axis=1, kind="stable")[:, :k]
-        out_d = np.take_along_axis(d2, order, axis=1)
-        out_i = np.take_along_axis(ids, order, axis=1)
-        out_i = np.where(np.isfinite(out_d), out_i, -1)
-        return jnp.asarray(out_i, dtype=jnp.int32), jnp.asarray(out_d)
+        d2 = np.where(dead, np.inf, d2)
+        return search_lib.merge_topk(
+            jnp.asarray(ids, jnp.int32), jnp.asarray(d2, jnp.float32), k=k
+        )
 
     # -- values --------------------------------------------------------------
 
@@ -512,11 +525,7 @@ class MutableHilbertIndex:
         """Gather per-point values for search-result ids; -1 slots get fill."""
         if self._values is None:
             raise ValueError("this index tracks no values (insert them)")
-        idn = np.asarray(jax.device_get(ids))
-        safe = np.clip(idn, 0, self._next_id - 1)
-        out = self._values[safe]
-        mask = (idn >= 0).reshape(idn.shape + (1,) * (out.ndim - idn.ndim))
-        return jnp.asarray(np.where(mask, out, fill))
+        return dense_values_at(self._values, ids, fill=fill)
 
     def values_dense(self) -> jax.Array:
         """The dense by-external-id values array (stale rows where deleted)."""

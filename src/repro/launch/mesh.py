@@ -17,3 +17,20 @@ def make_dev_mesh(model_axis: int = 1):
     n = len(jax.devices())
     assert n % model_axis == 0
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def data_mesh(n: int | None = None):
+    """1-D ``('data',)`` mesh over ``n`` devices (default: all local).
+
+    The ONE way row-partitioned index work builds its mesh — the sample
+    sort in ``core/distributed.py``, the sharded facade in
+    ``index/sharded.py``, and the distributed self-checks all call this
+    instead of hand-rolling ``Mesh``/``make_mesh`` shapes, so the axis
+    name and device order can never drift between build and serve.
+    """
+    devs = jax.devices()
+    if n is None:
+        n = len(devs)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"data_mesh(n={n}): host has {len(devs)} devices")
+    return jax.make_mesh((n,), ("data",), devices=devs[:n])

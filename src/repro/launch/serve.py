@@ -6,7 +6,10 @@ CPU smoke:  PYTHONPATH=src python -m repro.launch.serve --arch gemma3_1b \
 The decode loop is the same ``decode_step`` the dry-run lowers for the
 decode_32k/long_500k cells; --retrieval augments each step with a
 Hilbert-forest kNN-LM lookup (the paper's index as a first-class serving
-feature).
+feature).  ``--shards N`` row-partitions the datastore over N devices of
+the ``data`` mesh (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a CPU smoke):
+lookups then go through the sharded index's mesh-wide merged top-k.
 """
 
 from __future__ import annotations
@@ -34,6 +37,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--retrieval", action="store_true")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="row-partition the retrieval datastore over this "
+                         "many devices (1 = single-device mutable store)")
     ap.add_argument("--lam", type=float, default=0.25)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -71,9 +77,18 @@ def main() -> None:
         vals = corpus[:, 1:].reshape(-1)
         fc = ForestConfig(n_trees=8, bits=4, key_bits=min(256, cfg.d_model * 4),
                           leaf_size=32)
+        mesh = None
+        if args.shards > 1:
+            from repro.launch.mesh import data_mesh
+
+            mesh = data_mesh(args.shards)
         store = RetrievalStore.build(
-            keys, vals, IndexConfig(forest=fc, store_points=False))
-        print(f"[retrieval] datastore: {keys.shape[0]} entries")
+            keys, vals, IndexConfig(forest=fc, store_points=False),
+            mesh=mesh, shards=args.shards,
+        )
+        layout = (f"sharded x{args.shards}" if store.is_sharded
+                  else "mutable (single device)")
+        print(f"[retrieval] datastore: {keys.shape[0]} entries, {layout}")
 
     t0 = time.time()
     logits, caches = model.prefill(cfg, params, prompts, rules, **extra)

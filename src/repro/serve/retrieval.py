@@ -9,60 +9,107 @@ model's softmax (Khandelwal et al., 2020):
     p(w) = (1-λ)·p_model(w) + λ·p_knn(w),
     p_knn ∝ Σ_{(h_i,w_i) ∈ kNN} 1[w_i=w]·exp(-d(h, h_i)/T)
 
-The store is a :class:`repro.index.MutableHilbertIndex` carrying next-token
-values, so a serving deployment can **grow and shrink while serving**:
-:meth:`RetrievalStore.append` absorbs new (hidden, token) pairs into the
-write buffer (searchable immediately, sealed into segments as it fills) and
-:meth:`RetrievalStore.delete` tombstones stale entries — no offline rebuild.
-``save()``/``load()`` still lets one build job feed many serving workers.
+Two backing layouts, one ``lookup`` contract:
+
+* **Mutable (default, single device)** — a
+  :class:`repro.index.MutableHilbertIndex` carrying next-token values, so a
+  deployment can **grow and shrink while serving**: :meth:`append` absorbs
+  new pairs into the write buffer and :meth:`delete` tombstones stale
+  entries — no offline rebuild.
+* **Sharded (``shards > 1``)** — a
+  :class:`repro.index.ShardedHilbertIndex` row-partitioned over the mesh's
+  ``data`` axis: datastores larger than one device's RAM serve with kNN-LM
+  lookups going through the mesh-wide merged top-k (one jitted dispatch per
+  query chunk).  This layout is static — appends/deletes require a rebuild
+  (rebuild-and-swap is the intended maintenance path at that scale).
+
+``save()``/``load()`` round-trips both layouts; one build job feeds many
+serving workers, and a sharded checkpoint RESHARDS on load if the worker
+mesh differs from the build mesh.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple, Union
+import json
+import os
+import shutil
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint
 from repro.core.types import ForestConfig, SearchParams
 from repro.index import (
     IndexConfig,
     MutableHilbertIndex,
+    ShardedHilbertIndex,
     load_index_bundle,
     load_mutable_bundle,
 )
 
 _STORE_KIND = "retrieval_store"
+_SHARDED_STORE_KIND = "retrieval_store_sharded"
+_VALUES_DIR = "store_values"
+_MUTABLE_MANIFEST = "mutable_manifest.json"
+_SHARDED_MANIFEST = "sharded_manifest.json"
+
+
+def _remove_if_exists(path: str) -> None:
+    try:
+        os.remove(path)
+    except FileNotFoundError:
+        pass
 
 
 @dataclasses.dataclass
 class RetrievalStore:
-    index: MutableHilbertIndex
+    index: Optional[MutableHilbertIndex] = None
+    sharded: Optional[ShardedHilbertIndex] = None
+    sharded_values: Optional[np.ndarray] = None  # dense by datastore id
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array,
               config: Union[IndexConfig, ForestConfig, None] = None,
-              *, buffer_capacity: int = 4096, max_segments: int = 8
+              *, buffer_capacity: int = 4096, max_segments: int = 8,
+              shards: Optional[int] = None, mesh=None,
               ) -> "RetrievalStore":
         """keys: (n, d) hidden states; values: (n,) next tokens.
 
         ``config`` may be a full :class:`IndexConfig` or (for one release of
-        backward compatibility) a bare ``ForestConfig``.  The initial corpus
-        is bulk-loaded into one sealed segment so lookup latency matches a
-        static index; later :meth:`append` batches stream through the write
-        buffer.
+        backward compatibility) a bare ``ForestConfig``.
 
-        The default config keeps raw fp32 keys on each segment so
-        :meth:`compact` can merge segments and drop tombstones; pass
-        ``IndexConfig(store_points=False)`` to reclaim that RAM for
-        append-only deployments that never compact.
+        ``shards`` (or ``config.shards``, or a ``mesh``) > 1 builds the
+        row-partitioned sharded datastore; the default resolves to the
+        single-device mutable store.  The mutable path bulk-loads the
+        corpus into one sealed segment so lookup latency matches a static
+        index; later :meth:`append` batches stream through the write
+        buffer.  The default config keeps raw fp32 keys so the mutable
+        store can :meth:`compact` (and the sharded store can reshard on
+        load); pass ``IndexConfig(store_points=False)`` to reclaim that
+        RAM for deployments that never do either.
         """
         if config is None:
             config = IndexConfig()
         elif isinstance(config, ForestConfig):
             config = IndexConfig(forest=config)
+        if shards is None:
+            shards = (
+                int(mesh.shape["data"]) if mesh is not None
+                else (config.shards or 1)
+            )
+        if shards > 1:
+            config = dataclasses.replace(config, shards=shards)
+            sharded = ShardedHilbertIndex.build(keys, config, mesh=mesh)
+            vals = np.asarray(jax.device_get(values))
+            if vals.shape[:1] != (sharded.n_points,):
+                raise ValueError(
+                    f"values must be ({sharded.n_points}, ...), "
+                    f"got {vals.shape}"
+                )
+            return cls(sharded=sharded, sharded_values=vals.copy())
         index = MutableHilbertIndex(
             config, buffer_capacity=buffer_capacity, max_segments=max_segments
         )
@@ -70,21 +117,44 @@ class RetrievalStore:
         return cls(index=index)
 
     @property
+    def is_sharded(self) -> bool:
+        return self.sharded is not None
+
+    @property
     def values(self) -> jax.Array:
         """Dense next-token array keyed by datastore id (kNN-LM gather)."""
+        if self.is_sharded:
+            return jnp.asarray(self.sharded_values)
         return self.index.values_dense()
+
+    def values_at(self, ids, fill=0) -> jax.Array:
+        """Gather per-entry values for search-result ids; -1 slots get fill."""
+        if not self.is_sharded:
+            return self.index.values_at(ids, fill=fill)
+        from repro.index.mutable import dense_values_at
+
+        return dense_values_at(self.sharded_values, ids, fill=fill)
+
+    def _require_mutable(self, op: str) -> MutableHilbertIndex:
+        if self.is_sharded:
+            raise ValueError(
+                f"{op}() is not available on a sharded RetrievalStore: the "
+                "row-partitioned layout is static — rebuild-and-swap "
+                "(RetrievalStore.build + save/load) to change the corpus"
+            )
+        return self.index
 
     def append(self, keys: jax.Array, values: jax.Array) -> np.ndarray:
         """Stream new (hidden, token) pairs in while serving; returns ids."""
-        return self.index.insert(keys, values)
+        return self._require_mutable("append").insert(keys, values)
 
     def delete(self, ids) -> int:
         """Tombstone datastore entries (stale documents, TTL eviction)."""
-        return self.index.delete(ids)
+        return self._require_mutable("delete").delete(ids)
 
     def compact(self) -> "RetrievalStore":
         """Merge segments / drop tombstones (e.g. in a maintenance window)."""
-        self.index.compact()
+        self._require_mutable("compact").compact()
         return self
 
     def lookup(self, queries: jax.Array, params: SearchParams
@@ -92,46 +162,115 @@ class RetrievalStore:
         """(Q, d) hidden states -> (ids (Q,k), sq-dists (Q,k)).
 
         When fewer than k live entries exist, the tail is id -1 / +inf —
-        :func:`knn_lm_mix` masks those slots.  Lookups run the fused
-        single-dispatch path over each segment's packed-resident codes, and
-        batch sizes are bucketed to powers of two, so interactive decode
-        loops with varying batch shapes don't accumulate jit traces.
+        :func:`knn_lm_mix` masks those slots.  Both layouts run the fused
+        single-dispatch path over packed-resident codes (per segment on the
+        mutable store; per shard + cross-shard merge on the sharded one),
+        and batch sizes are bucketed to powers of two, so interactive
+        decode loops with varying batch shapes don't accumulate jit traces.
         """
+        if self.is_sharded:
+            return self.sharded.search(queries, params)
         return self.index.search(queries, params)
 
     def memory_report(self) -> dict:
-        """Serving-RAM accounting (segments + buffer + values + tombstones).
+        """Serving-RAM accounting for whichever layout backs the store.
 
-        Segment codes are resident nibble-packed (0.5 B/dim), so this is
-        the number to compare against a deployment's RAM budget — the
-        paper-model fields and the actual resident bytes now agree.
+        Mutable: segments + buffer + values + tombstones.  Sharded: the
+        partitioned accounting — ``per_device_bytes`` is what each device
+        in the mesh actually holds (≈ total / n_shards + the replicated
+        quantizer), the number to compare against a PER-DEVICE RAM budget
+        instead of the paper's single 16 GB box.
         """
+        if self.is_sharded:
+            rep = dict(self.sharded.memory_report())
+            rep["values_bytes"] = int(self.sharded_values.nbytes)
+            rep["total_bytes"] = rep["resident_bytes"] + rep["values_bytes"]
+            return rep
         return self.index.memory_report()
 
     def save(self, path: str) -> str:
-        """Persist segments + buffer + values as ONE manifest-committed save.
+        """Persist the store as ONE manifest-committed save.
 
         Every piece is an atomic ``repro.checkpoint`` bundle and the
         top-level manifest is renamed into place last, so a crash mid-save
         or a concurrent :meth:`load` in another worker can never observe the
-        index and its values out of sync.
+        index and its values out of sync.  The sharded path writes the
+        values to a FRESH step before its manifest commits (the step a
+        previous manifest references is never rewritten; unreferenced
+        steps are pruned after the commit, one generation of grace), and a
+        save that SWITCHES layout removes the other layout's manifest
+        after committing its own — rebuild-and-swap over an old mutable
+        save can never leave a loader preferring the stale store.
         """
-        return self.index.save(path, kind=_STORE_KIND)
+        if not self.is_sharded:
+            out = self.index.save(path, kind=_STORE_KIND)
+            _remove_if_exists(os.path.join(path, _SHARDED_MANIFEST))
+            return out
+        os.makedirs(path, exist_ok=True)
+        prev_step = None
+        try:
+            with open(os.path.join(path, _SHARDED_MANIFEST)) as f:
+                prev_step = json.load(f).get("extra_meta", {}).get(
+                    "values_step"
+                )
+        except (OSError, ValueError):
+            pass
+        vdir = os.path.join(path, _VALUES_DIR)
+        vstep = (checkpoint.latest_step(vdir) or 0) + 1
+        checkpoint.save(
+            vdir, step=vstep, tree={"values": self.sharded_values},
+            extra={"kind": _SHARDED_STORE_KIND},
+        )
+        out = self.sharded.save(
+            path, kind=_SHARDED_STORE_KIND,
+            extra_meta={"values_step": vstep},
+        )
+        _remove_if_exists(os.path.join(path, _MUTABLE_MANIFEST))
+        keep = {vstep, prev_step}
+        for name in os.listdir(vdir):
+            if (name.startswith("step_") and not name.endswith(".tmp")
+                    and int(name.split("_")[1]) not in keep):
+                shutil.rmtree(os.path.join(vdir, name), ignore_errors=True)
+        return out
 
     @classmethod
-    def load(cls, path: str) -> "RetrievalStore":
-        try:
+    def load(cls, path: str, *, mesh=None) -> "RetrievalStore":
+        mpath = os.path.join(path, _MUTABLE_MANIFEST)
+        spath = os.path.join(path, _SHARDED_MANIFEST)
+        has_mut, has_sh = os.path.exists(mpath), os.path.exists(spath)
+        if has_mut and has_sh:
+            # Only reachable if a layout-switching save crashed between its
+            # manifest commit and the stale-manifest cleanup; the newer
+            # manifest is the one that committed.
+            has_mut = os.path.getmtime(mpath) >= os.path.getmtime(spath)
+            has_sh = not has_mut
+        if has_mut:
             index, _ = load_mutable_bundle(path, kind=_STORE_KIND)
-        except FileNotFoundError:
-            # One release of backward compatibility: checkpoints written by
-            # the previous static RetrievalStore (a single HilbertIndex
-            # bundle + values sidecar, no mutable manifest) are adopted as a
-            # single sealed segment.  Saved with store_points=False, so
-            # they serve and absorb appends/deletes but cannot compact.
-            static_index, extras, _ = load_index_bundle(path, kind=_STORE_KIND)
-            index = MutableHilbertIndex.from_index(
-                static_index, values=extras["values"]
+            return cls(index=index)
+        if has_sh:
+            from repro.index.mutable import _restore_state_bundle
+
+            with open(spath) as f:
+                manifest = json.load(f)
+            sharded = ShardedHilbertIndex.load(
+                path, mesh=mesh, kind=_SHARDED_STORE_KIND
             )
+            # values restore at the manifest-referenced step, with the
+            # bundle's own declared dtype (tokens are int32 today)
+            state = _restore_state_bundle(
+                os.path.join(path, _VALUES_DIR),
+                manifest.get("extra_meta", {}).get("values_step"),
+            )
+            return cls(sharded=sharded, sharded_values=state["values"])
+        # One release of backward compatibility: checkpoints written by
+        # the PR-1 static RetrievalStore (a single HilbertIndex bundle +
+        # values sidecar, no mutable manifest) are adopted as a single
+        # sealed segment.  Saved with store_points=False, so they serve
+        # and absorb appends/deletes but cannot compact.
+        static_index, extras, _ = load_index_bundle(path, kind=_STORE_KIND)
+        index = MutableHilbertIndex.from_index(
+            static_index, values=extras["values"]
+        )
         return cls(index=index)
 
 
@@ -143,11 +282,16 @@ def knn_lm_mix(
     lam: float = 0.25,
     temperature: float = 1.0,
 ) -> jax.Array:
-    """Return log of the mixed distribution (B, V)."""
+    """Return log of the mixed distribution (B, V).
+
+    Layout-agnostic: ``store.lookup`` is the merged top-k whichever layout
+    backs the store, so the mix is identical code for a laptop datastore
+    and a mesh-wide sharded one.
+    """
     ids, d2 = store.lookup(hidden, params)            # (B, k)
     w = jax.nn.softmax(-d2 / temperature, axis=-1)    # (B, k)
     w = jnp.where(ids >= 0, w, 0.0)                   # mask -1 padding slots
-    tok = store.index.values_at(ids, fill=0)          # (B, k)
+    tok = store.values_at(ids, fill=0)                # (B, k)
     p_knn = jnp.zeros_like(logits).at[
         jnp.arange(logits.shape[0])[:, None], tok
     ].add(w)

@@ -38,6 +38,31 @@ def test_full_grid_is_hamiltonian_path(d, bits):
     assert len(np.unique(np.asarray(order))) == len(pts)
 
 
+@pytest.mark.parametrize("d,bits,key_bits", [(2, 2, 4), (3, 2, 6), (16, 2, 32),
+                                             (48, 4, 192)])
+def test_hilbert_keys_jit_matches_eager(d, bits, key_bits):
+    """jitted keys == op-by-op keys.
+
+    Regression test for an XLA:CPU miscompile: ``lax.associative_scan``
+    (the Gray-encode prefix-XOR) fused with ``_level_pass`` produced
+    colliding, non-Hamiltonian keys at d=2, bits=2 under jit only — the
+    seed-era ``test_full_grid_is_hamiltonian_path[2-2]`` failure.  Fixed by
+    the Hillis-Steele ``_prefix_xor`` formulation.
+    """
+    rng = np.random.default_rng(7)
+    pts = jnp.asarray(rng.normal(size=(257, d)).astype(np.float32))
+    lo = jnp.full((d,), -4.0)
+    hi = jnp.full((d,), 4.0)
+    with jax.disable_jit():
+        ref = np.asarray(
+            hilbert.hilbert_keys(pts, bits=bits, key_bits=key_bits, lo=lo, hi=hi)
+        )
+    got = np.asarray(
+        hilbert.hilbert_keys(pts, bits=bits, key_bits=key_bits, lo=lo, hi=hi)
+    )
+    np.testing.assert_array_equal(got, ref)
+
+
 @pytest.mark.parametrize("d,bits", [(2, 4), (5, 3), (16, 2), (48, 4)])
 def test_transpose_roundtrip(d, bits):
     rng = np.random.default_rng(0)

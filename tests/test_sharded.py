@@ -1,0 +1,175 @@
+"""Sharded index: merge edge cases in-process, mesh parity in a subprocess.
+
+The multi-device parity battery lives in ``scripts/sharded_check.py`` and
+runs with 8 simulated devices in a subprocess (this pytest process keeps
+its default device view).  In-process tests cover the pieces that don't
+need a mesh: the associative ``merge_topk`` contract (including the edge
+cases the cross-shard merge leans on) and the 1-shard facade's bit-identity
+with the plain fused path.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.search import merge_topk
+from repro.data import ann_datasets
+from repro.index import (
+    ForestConfig,
+    HilbertIndex,
+    IndexConfig,
+    SearchParams,
+    ShardedHilbertIndex,
+    build_auto,
+)
+from repro.launch.mesh import data_mesh
+
+
+# -- merge_topk: the cross-shard / cross-segment merge -----------------------
+
+
+def test_merge_topk_dedups_duplicate_ids_keeping_min():
+    # id 7 appears in three "shards" with different distances (the
+    # stale-duplicate case); id 3 appears twice at equal distance (the
+    # padding-row case after mutable-index compaction / shard padding).
+    ids = jnp.asarray([[7, 3, 9, 7, 3, 7]], jnp.int32)
+    d = jnp.asarray([[5.0, 2.0, 1.0, 0.5, 2.0, 4.0]], jnp.float32)
+    out_i, out_d = merge_topk(ids, d, k=4)
+    assert out_i.tolist() == [[7, 9, 3, -1]]
+    assert out_d.tolist()[0][:3] == [0.5, 1.0, 2.0]
+    assert np.isinf(np.asarray(out_d)[0, 3])
+
+
+def test_merge_topk_k_larger_than_pool_pads():
+    # k exceeds every source's candidate pool: tail is id -1 / +inf — the
+    # contract the sharded path relies on when k > k2*(2h+1) per shard.
+    ids = jnp.asarray([[4, 2], [1, -1]], jnp.int32)
+    d = jnp.asarray([[1.0, 0.5], [3.0, 0.1]], jnp.float32)
+    out_i, out_d = merge_topk(ids, d, k=5)
+    assert out_i.tolist() == [[2, 4, -1, -1, -1], [1, -1, -1, -1, -1]]
+    assert np.isinf(np.asarray(out_d)[0, 2:]).all()
+    assert np.isinf(np.asarray(out_d)[1, 1:]).all()
+
+
+def test_merge_topk_all_invalid_and_nonfinite():
+    ids = jnp.asarray([[-1, -1, 5]], jnp.int32)
+    d = jnp.asarray([[0.0, 1.0, jnp.inf]], jnp.float32)
+    out_i, out_d = merge_topk(ids, d, k=3)
+    assert out_i.tolist() == [[-1, -1, -1]]
+    assert np.isinf(np.asarray(out_d)).all()
+
+
+def test_merge_topk_single_sorted_source_passes_through():
+    # A single already-sorted source (the mutable index's one-segment case)
+    # must pass through bit-identically, including tie order.
+    ids = jnp.asarray([[10, 11, 12, 13]], jnp.int32)
+    d = jnp.asarray([[0.5, 0.5, 0.7, jnp.inf]], jnp.float32)
+    out_i, out_d = merge_topk(ids, d, k=4)
+    assert out_i.tolist() == [[10, 11, 12, -1]]
+    np.testing.assert_array_equal(np.asarray(out_d)[0, :3],
+                                  np.asarray(d)[0, :3])
+
+
+# -- 1-shard facade: bit-identity with the plain fused path ------------------
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    data, queries = ann_datasets.lowrank_dataset_with_queries(
+        1200, 12, 16, n_clusters=8, seed=1
+    )
+    return np.asarray(data), jnp.asarray(queries)
+
+
+CFG = IndexConfig(
+    forest=ForestConfig(n_trees=3, bits=4, key_bits=64, leaf_size=16, seed=0)
+)
+SP = SearchParams(k1=32, k2=64, h=2, k=10)
+
+
+def test_single_shard_bit_identical_to_fused(dataset):
+    data, queries = dataset
+    sharded = ShardedHilbertIndex.build(
+        jnp.asarray(data), CFG, mesh=data_mesh(1)
+    )
+    plain = HilbertIndex.build(jnp.asarray(data), CFG)
+    ids_s, d2_s = sharded.search(queries, SP)
+    ids_p, d2_p = plain.search(queries, SP, fused=True)
+    np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_p))
+    np.testing.assert_array_equal(np.asarray(d2_s), np.asarray(d2_p))
+    rep = sharded.memory_report()
+    assert rep["n_shards"] == 1
+    assert rep["per_device_bytes"] == [rep["resident_bytes"]]
+
+
+def test_single_shard_save_load_roundtrip(dataset, tmp_path):
+    data, queries = dataset
+    sharded = ShardedHilbertIndex.build(
+        jnp.asarray(data), CFG, mesh=data_mesh(1)
+    )
+    ids, d2 = sharded.search(queries, SP)
+    path = os.path.join(str(tmp_path), "ck")
+    sharded.save(path)
+    loaded = ShardedHilbertIndex.load(path, mesh=data_mesh(1))
+    ids2, d22 = loaded.search(queries, SP)
+    np.testing.assert_array_equal(np.asarray(ids2), np.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(d22), np.asarray(d2))
+
+
+def test_v2_bundle_adopts_as_single_shard(dataset, tmp_path):
+    data, queries = dataset
+    plain = HilbertIndex.build(jnp.asarray(data), CFG)
+    path = os.path.join(str(tmp_path), "v2")
+    plain.save(path)
+    adopted = ShardedHilbertIndex.load(path, mesh=data_mesh(1))
+    assert adopted.n_shards == 1
+    np.testing.assert_array_equal(
+        np.asarray(adopted.search(queries, SP)[0]),
+        np.asarray(plain.search(queries, SP)[0]),
+    )
+
+
+def test_build_auto_picks_by_device_count(dataset):
+    data, _ = dataset
+    got = build_auto(jnp.asarray(data), CFG)
+    if jax.device_count() > 1:
+        assert isinstance(got, ShardedHilbertIndex)
+        assert got.n_shards == jax.device_count()
+    else:
+        assert isinstance(got, HilbertIndex)
+    # shards=1 forces single-device regardless of the host
+    import dataclasses
+
+    forced = build_auto(
+        jnp.asarray(data), dataclasses.replace(CFG, shards=1)
+    )
+    assert isinstance(forced, HilbertIndex)
+
+
+def test_index_config_shards_roundtrip():
+    cfg = IndexConfig(shards=4)
+    assert IndexConfig.from_dict(cfg.to_dict()) == cfg
+    assert IndexConfig.from_dict(IndexConfig().to_dict()).shards is None
+
+
+# -- multi-device parity battery (subprocess, 8 simulated devices) -----------
+
+
+def test_sharded_parity_8_devices():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "sharded_check.py")],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    assert r.returncode == 0, (
+        f"STDOUT:\n{r.stdout[-3000:]}\nSTDERR:\n{r.stderr[-3000:]}"
+    )
+    assert "ALL SHARDED CHECKS PASSED" in r.stdout
