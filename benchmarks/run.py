@@ -14,6 +14,10 @@ API (build once → search / knn_graph off the same artifact).
   sharded  — row-partitioned shard_map search vs single-device
              (emits BENCH_sharded.json; re-execs itself with 8
              simulated devices)
+  sharded_churn — streaming insert/delete/compact on the sharded-mutable
+             index: recall-vs-rebuild, one-dispatch invariant, routing
+             locality (emits BENCH_sharded_churn.json; re-execs itself
+             with 8 simulated devices)
 
 ``python -m benchmarks.run [names...]`` (default: all).
 """
@@ -24,7 +28,7 @@ import time
 
 def main() -> None:
     names = sys.argv[1:] or ["kernels", "hsort", "phases", "table2", "table1",
-                             "churn", "search", "sharded"]
+                             "churn", "search", "sharded", "sharded_churn"]
     t00 = time.time()
     for name in names:
         print(f"\n===== {name} =====", flush=True)
@@ -45,6 +49,8 @@ def main() -> None:
             from benchmarks import search_path as m
         elif name == "sharded":
             from benchmarks import sharded_search as m
+        elif name == "sharded_churn":
+            from benchmarks import sharded_churn as m
         else:
             raise SystemExit(f"unknown benchmark {name!r}")
         m.main()

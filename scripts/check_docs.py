@@ -1,0 +1,163 @@
+"""Docs checker: code blocks must parse, doctests must pass, links resolve.
+
+Run: python scripts/check_docs.py [files...]   (default: README.md docs/*.md)
+
+Three checks over every markdown file:
+
+1. **Python code blocks compile** — every ```python fence must be valid
+   syntax (illustrative blocks may reference undefined names; they still
+   have to parse).
+2. **Doctests run** — fenced blocks containing ``>>>`` prompts execute
+   under ``doctest`` (the ``python -m doctest`` semantics, applied to
+   markdown fences) and their outputs must match.
+3. **Links and anchors resolve** — every relative markdown link must point
+   at an existing file, and every ``#fragment`` (same-file or cross-file)
+   must match a heading's GitHub-style anchor slug.
+
+Exit status is non-zero with a per-problem report on any failure; also run
+in-process by ``tests/test_docs.py`` so the tier-1 suite catches doc rot.
+"""
+
+from __future__ import annotations
+
+import doctest
+import glob
+import os
+import re
+import sys
+from typing import List, Tuple
+
+_FENCE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — skip images ![..](..) and bare autolinks
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*$")
+
+
+def _slugify(heading: str) -> str:
+    """GitHub's anchor algorithm (close enough for ASCII docs)."""
+    s = re.sub(r"`([^`]*)`", r"\1", heading)  # code spans keep their text
+    s = s.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _code_blocks(text: str) -> List[Tuple[int, str, str]]:
+    """(start_line, language, body) for every fenced block."""
+    out, lines = [], text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        lang, start = m.group(1).lower(), i + 1
+        j = start
+        while j < len(lines) and not lines[j].startswith("```"):
+            j += 1
+        out.append((start + 1, lang, "\n".join(lines[start:j])))
+        i = j + 1
+    return out
+
+
+def _anchors(path: str) -> set:
+    try:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+    except OSError:
+        return set()
+    slugs: set = set()
+    in_fence = False
+    for line in text.splitlines():
+        if line.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if m:
+            base = _slugify(m.group(2))
+            slug, n = base, 1
+            while slug in slugs:  # duplicate headings get -1, -2, ...
+                slug, n = f"{base}-{n}", n + 1
+            slugs.add(slug)
+    return slugs
+
+
+def check_file(path: str) -> List[str]:
+    problems: List[str] = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    base = os.path.dirname(os.path.abspath(path))
+
+    for line, lang, body in _code_blocks(text):
+        if lang not in ("python", "py"):
+            continue
+        if ">>>" in body:
+            runner = doctest.DocTestRunner(verbose=False)
+            parser = doctest.DocTestParser()
+            try:
+                test = parser.get_doctest(body, {}, path, path, line)
+            except ValueError as e:
+                problems.append(f"{path}:{line}: bad doctest block: {e}")
+                continue
+            out: List[str] = []
+            runner.run(test, out=out.append)
+            if runner.failures:
+                problems.append(
+                    f"{path}:{line}: doctest failed:\n" + "".join(out)
+                )
+        else:
+            try:
+                compile(body, f"{path}:{line}", "exec")
+            except SyntaxError as e:
+                problems.append(
+                    f"{path}:{line}: python block does not parse: {e}"
+                )
+
+    in_fence = False
+    for ln, raw in enumerate(text.splitlines(), 1):
+        if raw.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(raw):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # URL scheme
+                continue
+            file_part, _, frag = target.partition("#")
+            tpath = (
+                os.path.normpath(os.path.join(base, file_part))
+                if file_part else path
+            )
+            if file_part and not os.path.exists(tpath):
+                problems.append(f"{path}:{ln}: broken link -> {target}")
+                continue
+            if frag and not tpath.endswith((".md", path)):
+                continue  # anchors only checked inside markdown
+            if frag and frag not in _anchors(tpath):
+                problems.append(
+                    f"{path}:{ln}: broken anchor -> {target} "
+                    f"(no heading slugs to '{frag}')"
+                )
+    return problems
+
+
+def main(paths: List[str]) -> int:
+    if not paths:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        paths = [os.path.join(root, "README.md")] + sorted(
+            glob.glob(os.path.join(root, "docs", "*.md"))
+        )
+    problems: List[str] = []
+    for p in paths:
+        problems.extend(check_file(p))
+    for msg in problems:
+        print(msg)
+    print(f"checked {len(paths)} files: "
+          f"{'FAILED' if problems else 'ok'} ({len(problems)} problems)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

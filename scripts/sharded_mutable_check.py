@@ -1,0 +1,297 @@
+"""Self-test for repro.index.sharded_mutable on 8 simulated devices.
+
+Run via: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+             python scripts/sharded_mutable_check.py
+(tests/test_sharded_mutable.py spawns this as a subprocess so the main
+pytest process keeps its single-device view.)
+
+Checks, in order:
+  1. Fresh build: search bit-equal to a static ShardedHilbertIndex over
+     the same corpus, in ONE jitted dispatch per chunk.
+  2. Interleaved insert/delete stream (flush-sealed generations, skewed
+     inserts producing empty shards in a generation, tombstoned buffer
+     rows) keeps finding exact nearest neighbors, still one dispatch.
+  3. Full compaction re-balances across shards: post-compact search is
+     BIT-EQUAL to a fresh ShardedHilbertIndex build on the surviving rows
+     (the acceptance criterion).
+  4. format_version-4 save/load round-trips bit-equal, with buffered rows
+     and tombstones in flight; a second save dedups unchanged bundles and
+     prunes stale ones.
+  5. v3 (static sharded) checkpoints adopt into the mutable facade
+     bit-equal, then accept writes; 8->4 reshard-on-load equals a fresh
+     4-shard build over the survivors.
+  6. Sharded-mutable RetrievalStore: append/delete while serving (the
+     calls that used to raise), kNN-LM mix end to end, save/load,
+     v3-store adoption.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+).strip()
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import SearchParams
+from repro.data import ann_datasets
+from repro.index import (
+    ForestConfig,
+    IndexConfig,
+    ShardedHilbertIndex,
+    ShardedMutableHilbertIndex,
+    build_auto,
+)
+from repro.launch.mesh import data_mesh
+from repro.serve.retrieval import RetrievalStore, knn_lm_mix
+
+assert len(jax.devices()) == 8, jax.devices()
+
+N, D, Q = 1024, 16, 12
+CFG = IndexConfig(
+    forest=ForestConfig(n_trees=2, bits=4, key_bits=64, leaf_size=16, seed=0)
+)
+SP = SearchParams(k1=32, k2=64, h=1, k=10)
+
+data, queries = ann_datasets.lowrank_dataset_with_queries(
+    N + 512, Q, D, n_clusters=8, seed=0
+)
+data = np.asarray(data)
+queries = jnp.asarray(queries)
+extra = data[N:]
+data = data[:N]
+rng = np.random.default_rng(0)
+MESH = data_mesh(8)
+
+
+def expect_bitequal(mut, fresh, live_ids, label):
+    """mut's ext-id results == fresh's row-id results mapped through live_ids."""
+    fi, fd = fresh.search(queries, SP)
+    mi, md = mut.search(queries, SP)
+    assert mut.last_dispatch_count == 1, mut.last_dispatch_count
+    exp = np.where(np.asarray(fi) >= 0,
+                   live_ids[np.clip(np.asarray(fi), 0, None)], -1)
+    np.testing.assert_array_equal(exp, np.asarray(mi), err_msg=label)
+    np.testing.assert_array_equal(np.asarray(fd), np.asarray(md),
+                                  err_msg=label)
+    print(f"OK: {label}")
+
+
+# --- 1. fresh build bit-equal to the static sharded index -----------------
+idx = ShardedMutableHilbertIndex.build(
+    jnp.asarray(data), CFG, mesh=MESH, buffer_capacity=64, max_segments=4
+)
+static = ShardedHilbertIndex.build(jnp.asarray(data), CFG, mesh=MESH)
+expect_bitequal(idx, static, np.arange(N, dtype=np.int32),
+                "fresh build == static sharded (1 dispatch)")
+
+# --- 2. interleaved stream: flushes, skew (empty shards), tombstones ------
+live = {int(i) for i in range(N)}
+skew = np.tile(data[3][None, :], (96, 1)) + rng.normal(
+    0, 1e-3, (96, D)
+).astype(np.float32)
+sk_ids = idx.insert(skew)          # skewed: routes to one curve range
+live.update(int(i) for i in sk_ids)
+assert idx.n_segments > 1, "skewed inserts should have sealed generations"
+
+drop = rng.choice(np.asarray(sorted(live)), 150, replace=False)
+idx.delete(drop)
+live -= {int(i) for i in drop}
+ins2 = idx.insert(extra[:200])     # spread inserts
+live.update(int(i) for i in ins2)
+idx.delete(ins2[:40])              # some still buffered when deleted
+live -= {int(i) for i in ins2[:40]}
+idx.delete(sk_ids[:50])
+live -= {int(i) for i in sk_ids[:50]}
+
+ids_s, d_s = idx.search(queries, SP)
+assert idx.last_dispatch_count == 1
+live_ids, live_pts = idx._gather_live()
+assert set(int(i) for i in live_ids) == live
+got = np.asarray(ids_s)
+assert not np.isin(got[got >= 0], drop).any(), "tombstones leaked"
+assert np.isin(got[got >= 0], live_ids).all(), "stale ids surfaced"
+
+# Probe rows: insert the queries THEMSELVES — buffered rows are searched
+# exactly (brute force at distance 0), so each probe id must surface in
+# its own query's top-k, and vanish the moment it is tombstoned.
+probe = idx.insert(np.asarray(queries))
+pi, pd = idx.search(queries, SP)
+assert idx.last_dispatch_count == 1
+pi = np.asarray(pi)
+for r in range(Q):
+    assert probe[r] in pi[r], (r, probe[r], pi[r])
+    assert pd[r][list(pi[r]).index(probe[r])] <= 1e-6
+idx.delete(probe)
+live -= {int(i) for i in probe}
+pi2, _ = idx.search(queries, SP)
+assert not np.isin(np.asarray(pi2), probe).any(), "deleted probes leaked"
+print(f"OK: churn stream (segments={idx.n_segments}, "
+      f"buffered={idx.n_buffered}, 1 dispatch, probes exact, "
+      f"no tombstone leaks)")
+
+# --- 3. full compaction == fresh sharded rebuild (ACCEPTANCE) -------------
+idx.compact()
+assert idx.n_segments == 1 and idx.n_buffered == 0
+fresh = ShardedHilbertIndex.build(jnp.asarray(live_pts), CFG, mesh=MESH)
+expect_bitequal(idx, fresh, live_ids,
+                "post-compact == fresh sharded build on survivors")
+
+# --- 4. v4 save/load round-trip with writes in flight ---------------------
+idx.insert(extra[200:260])
+idx.delete(live_ids[:7])
+a1, b1 = idx.search(queries, SP)
+with tempfile.TemporaryDirectory() as td:
+    idx.save(td)
+    first = {
+        os.path.join(dp, f) for dp, _, fs in os.walk(td) for f in fs
+    }
+    re = ShardedMutableHilbertIndex.load(td, mesh=MESH)
+    a2, b2 = re.search(queries, SP)
+    assert re.last_dispatch_count == 1
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    # loaded index keeps streaming: routed insert + delete + compact
+    re.insert(extra[260:280])
+    re.compact()
+    # re-save over the same path: unchanged segment bundles are skipped,
+    # and a fresh state step replaces the old one (one-gen grace pruning)
+    idx.save(td)
+    idx.save(td)
+    steps = os.listdir(os.path.join(td, "state"))
+    assert len(steps) <= 2, steps
+    print("OK: v4 save/load round-trip bit-equal (+ dedup/prune on resave)")
+
+# --- 5. v3 adoption + reshard-on-load -------------------------------------
+with tempfile.TemporaryDirectory() as td:
+    static.save(td)
+    adopted = ShardedMutableHilbertIndex.load(td, mesh=MESH)  # v3 -> v4
+    si, sd = static.search(queries, SP)
+    ai, ad = adopted.search(queries, SP)
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ai))
+    np.testing.assert_array_equal(np.asarray(sd), np.asarray(ad))
+    adopted.insert(extra[:10])
+    adopted.delete([0, 1, 2])
+    with tempfile.TemporaryDirectory() as td4:
+        adopted.save(td4)                      # v4 round-trip of the adopt
+        li, lp = adopted._gather_live()
+        re4 = ShardedMutableHilbertIndex.load(td4, mesh=data_mesh(4))
+        assert re4.n_shards == 4
+        fresh4 = ShardedHilbertIndex.build(
+            jnp.asarray(lp), CFG, mesh=data_mesh(4)
+        )
+        fi, fd = fresh4.search(queries, SP)
+        ri, rd = re4.search(queries, SP)
+        exp = np.where(np.asarray(fi) >= 0,
+                       li[np.clip(np.asarray(fi), 0, None)], -1)
+        np.testing.assert_array_equal(exp, np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(fd), np.asarray(rd))
+print("OK: v3 adoption bit-equal; 8->4 reshard == fresh 4-shard build")
+
+# --- 6. streaming sharded RetrievalStore ----------------------------------
+keys = data[:512]
+vals = rng.integers(0, 97, 512).astype(np.int32)
+store = RetrievalStore.build(
+    jnp.asarray(keys), jnp.asarray(vals), CFG, shards=8, mesh=MESH,
+    buffer_capacity=64,
+)
+assert store.is_sharded
+new_ids = store.append(jnp.asarray(extra[:32]),
+                       jnp.asarray(np.arange(32, dtype=np.int32)))
+store.delete(new_ids[:8])
+ids_q, _ = store.lookup(queries, SP)
+toks = np.asarray(store.values_at(ids_q))
+take = np.asarray(ids_q)
+mask = (take >= 0) & (take < 512)
+np.testing.assert_array_equal(toks[mask], vals[np.asarray(take)[mask]])
+logits = jnp.asarray(rng.normal(size=(Q, 97)), jnp.float32)
+mixed = knn_lm_mix(logits, queries, store, SP, lam=0.3)
+assert np.isfinite(np.asarray(mixed)).all()
+rep = store.memory_report()
+assert rep["n_shards"] == 8 and rep["per_device_bytes"][0] > 0
+with tempfile.TemporaryDirectory() as td:
+    store.save(td)
+    store2 = RetrievalStore.load(td, mesh=MESH)
+    assert store2.is_sharded
+    i1, d1 = store.lookup(queries, SP)
+    i2, d2 = store2.lookup(queries, SP)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    store2.append(jnp.asarray(extra[32:40]),
+                  jnp.asarray(np.arange(8, dtype=np.int32)))
+    store2.compact()
+print("OK: sharded RetrievalStore streams (append/delete/compact) + "
+      "save/load")
+
+# a PR-4-era v3 STORE checkpoint (static sharded index + values sidecar)
+# adopts into the streaming layout on load
+from repro import checkpoint as ckpt_lib
+
+with tempfile.TemporaryDirectory() as td:
+    base = ShardedHilbertIndex.build(jnp.asarray(keys), CFG, mesh=MESH)
+    ckpt_lib.save(os.path.join(td, "store_values"), step=1,
+                  tree={"values": vals},
+                  extra={"kind": "retrieval_store_sharded"})
+    base.save(td, kind="retrieval_store_sharded",
+              extra_meta={"values_step": 1})
+    old = RetrievalStore.load(td, mesh=MESH)
+    assert old.is_sharded
+    oi, od = old.lookup(queries, SP)
+    bi, bd = base.search(queries, SP)
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(oi))
+    np.testing.assert_array_equal(np.asarray(bd), np.asarray(od))
+    old.append(jnp.asarray(extra[:4]),
+               jnp.asarray(np.arange(4, dtype=np.int32)))  # used to raise
+    old.delete([0])
+    # in-place v3 -> v4 upgrade: the save must remove the static layout's
+    # now-unreachable payload (shards/ bundles + store_values/ sidecar),
+    # not just its manifest, and the upgraded checkpoint must reload
+    pre, _ = old.lookup(queries, SP)
+    old.save(td)
+    assert not os.path.exists(os.path.join(td, "sharded_manifest.json"))
+    assert not os.path.exists(os.path.join(td, "shards"))
+    assert not os.path.exists(os.path.join(td, "store_values"))
+    up = RetrievalStore.load(td, mesh=MESH)
+    post, _ = up.lookup(queries, SP)
+    np.testing.assert_array_equal(np.asarray(pre), np.asarray(post))
+print("OK: v3 store checkpoint adopts into the streaming layout "
+      "(+ in-place upgrade cleans the static payload)")
+
+# ...including one saved RAM-lean (store_points=False, the old static
+# serving default): it serves and absorbs writes, but compaction has no
+# raw keys to re-sort and must raise — MutableHilbertIndex.from_index
+# semantics, sharded
+with tempfile.TemporaryDirectory() as td:
+    lean_cfg = IndexConfig(forest=CFG.forest, store_points=False)
+    lean = ShardedHilbertIndex.build(jnp.asarray(keys), lean_cfg, mesh=MESH)
+    ckpt_lib.save(os.path.join(td, "store_values"), step=1,
+                  tree={"values": vals},
+                  extra={"kind": "retrieval_store_sharded"})
+    lean.save(td, kind="retrieval_store_sharded",
+              extra_meta={"values_step": 1})
+    old = RetrievalStore.load(td, mesh=MESH)
+    assert old.is_sharded
+    oi, od = old.lookup(queries, SP)
+    bi, bd = lean.search(queries, SP)
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(oi))
+    np.testing.assert_array_equal(np.asarray(bd), np.asarray(od))
+    aid = old.append(jnp.asarray(extra[:6]),
+                     jnp.asarray(np.arange(6, dtype=np.int32)))
+    old.delete(aid[:2])
+    old.lookup(queries, SP)
+    try:
+        old.compact()
+        raise AssertionError("compacting a point-less base must raise")
+    except ValueError as e:
+        assert "stored points" in str(e)
+print("OK: store_points=False v3 store still loads, serves, and streams")
+
+# build_auto returns the streaming facade on request
+auto = build_auto(jnp.asarray(data[:256]), CFG, mesh=MESH, mutable=True)
+assert isinstance(auto, ShardedMutableHilbertIndex)
+print("OK: build_auto(mutable=True) picks ShardedMutableHilbertIndex")
+
+print("ALL SHARDED-MUTABLE CHECKS PASSED")

@@ -2,6 +2,7 @@ from repro.checkpoint.checkpoint import (  # noqa: F401
     AsyncCheckpointer,
     atomic_write_json,
     latest_step,
+    prune_steps,
     restore,
     save,
 )

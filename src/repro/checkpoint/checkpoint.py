@@ -80,6 +80,26 @@ def atomic_write_json(path: str, obj: Any) -> str:
     return path
 
 
+def prune_steps(ckpt_dir: str, keep) -> None:
+    """Remove ``step_*`` bundles whose step number is not in ``keep``.
+
+    The shared tail of every manifest-committed multi-bundle save (mutable
+    index state, retrieval-store values, sharded-mutable buffer sidecars):
+    after the new manifest commits, steps referenced by neither the new nor
+    the immediately-previous manifest are dropped so repeated saves to one
+    path occupy bounded disk.  ``.tmp`` partials and non-step entries are
+    left alone; missing directories are a no-op.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return
+    keep = {k for k in keep if k is not None}
+    for name in os.listdir(ckpt_dir):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        if int(name.split("_")[1]) not in keep:
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     """Largest fully-written step (ignores .tmp partials)."""
     if not os.path.isdir(ckpt_dir):

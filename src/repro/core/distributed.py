@@ -249,6 +249,90 @@ def hilbert_partition(
 
 
 # ---------------------------------------------------------------------------
+# Partition bounds + insert routing (the sharded-mutable write path)
+# ---------------------------------------------------------------------------
+
+
+_MAX_KEY_FILL = np.uint32(0xFFFFFFFF)
+
+
+def _np_lex_ge(keys: np.ndarray, bound: np.ndarray) -> np.ndarray:
+    """Vectorized lexicographic ``keys[i] >= bound`` over (m, W) uint32 rows."""
+    m = keys.shape[0]
+    result = np.zeros((m,), np.bool_)
+    decided = np.zeros((m,), np.bool_)
+    for w in range(keys.shape[1]):
+        gt = ~decided & (keys[:, w] > bound[w])
+        lt = ~decided & (keys[:, w] < bound[w])
+        result |= gt
+        decided |= gt | lt
+    result |= ~decided  # all words equal -> key == bound -> ge
+    return result
+
+
+def curve_partition_bounds(
+    first_points: list,            # per shard: (d,) np array or None (empty)
+    cfg: ForestConfig,
+    lo: np.ndarray,
+    hi: np.ndarray,
+) -> np.ndarray:
+    """Master-curve boundary keys of a contiguous Hilbert partition.
+
+    ``first_points[s]`` is the first row (in master-curve order) that shard
+    ``s`` owns, or ``None`` for an empty shard.  Returns ``(S-1, W)`` uint32
+    where row ``s-1`` is shard ``s``'s opening key; empty shards get the
+    all-ones MAX key so :func:`route_to_shards` never routes new rows to
+    them (the curve ran out of data before reaching their range).  Keys are
+    computed with the *global* ``lo``/``hi`` bounds the partition itself
+    used, so routing agrees with :func:`hilbert_partition` up to equal-key
+    ties.
+    """
+    from repro.core import hilbert as hilbert_lib
+
+    n_shards = len(first_points)
+    w = hilbert_lib.key_words(cfg.key_bits)
+    bounds = np.full((max(n_shards - 1, 0), w), _MAX_KEY_FILL, np.uint32)
+    present = [s for s in range(1, n_shards) if first_points[s] is not None]
+    if present:
+        pts = jnp.asarray(np.stack([first_points[s] for s in present]))
+        keys = np.asarray(hilbert_lib.hilbert_keys(
+            pts, bits=cfg.bits, key_bits=cfg.key_bits,
+            lo=jnp.asarray(lo), hi=jnp.asarray(hi),
+        ))
+        for row, s in enumerate(present):
+            bounds[s - 1] = keys[row]
+    return bounds
+
+
+def route_to_shards(
+    points: np.ndarray,            # (m, d)
+    cfg: ForestConfig,
+    lo: np.ndarray,
+    hi: np.ndarray,
+    bounds: np.ndarray,            # (S-1, W) from curve_partition_bounds
+) -> np.ndarray:
+    """Route rows to the shard owning their master-curve range.
+
+    Returns ``(m,)`` int32 shard indices: ``sum_s [key >= bounds[s]]`` — a
+    lexicographic searchsorted against the partition's opening keys.  Points
+    outside the frozen ``lo``/``hi`` box clamp to the box edge (same
+    behavior as the curve quantization itself), so routing is total.
+    """
+    from repro.core import hilbert as hilbert_lib
+
+    if points.shape[0] == 0:
+        return np.zeros((0,), np.int32)
+    keys = np.asarray(hilbert_lib.hilbert_keys(
+        jnp.asarray(points, jnp.float32), bits=cfg.bits,
+        key_bits=cfg.key_bits, lo=jnp.asarray(lo), hi=jnp.asarray(hi),
+    ))
+    shard = np.zeros((points.shape[0],), np.int32)
+    for b in bounds:
+        shard += _np_lex_ge(keys, b).astype(np.int32)
+    return shard
+
+
+# ---------------------------------------------------------------------------
 # Halo windows (Task-2 stage 1, boundary-correct)
 # ---------------------------------------------------------------------------
 

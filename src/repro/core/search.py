@@ -64,6 +64,7 @@ __all__ = [
     "fused_search_chunk",
     "merge_topk",
     "brute_force_topk",
+    "inflate_k",
     "paper_memory_model",
 ]
 
@@ -427,6 +428,21 @@ def merge_topk(ids, dists, *, k):
             [out_d, jnp.full((qn, pad), jnp.inf, out_d.dtype)], axis=1
         )
     return out_ids, out_d
+
+
+def inflate_k(k: int, dead: int, pool: int) -> int:
+    """Tombstone-aware per-source ``k`` inflation (the LSM search contract).
+
+    A sealed segment queried for ``k`` results can have up to ``dead`` of
+    them masked by tombstones (or duplicate padding rows, on the sharded
+    layout), so every fan-out search path asks each source for
+    ``k + dead`` candidates, capped at the source's stage-2 candidate pool
+    ``pool`` (beyond which inflation cannot help) and floored at 1.  Shared
+    by :class:`repro.index.MutableHilbertIndex` (per segment) and
+    :class:`repro.index.ShardedMutableHilbertIndex` (per generation,
+    uniform across shards).
+    """
+    return max(1, min(k + dead, pool))
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

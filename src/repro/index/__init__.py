@@ -22,11 +22,17 @@ When the corpus outgrows one device's RAM, the row-partitioned facade
 :class:`repro.index.ShardedHilbertIndex` (:mod:`repro.index.sharded`)
 spreads the forest over the mesh's ``data`` axis — per-shard fused search
 inside ``shard_map`` merged by an associative cross-shard top-k, one
-jitted dispatch per query chunk.  :func:`repro.index.build_auto` picks the
-right facade for the host::
+jitted dispatch per query chunk.  And when that sharded deployment must
+ALSO absorb churn, :class:`repro.index.ShardedMutableHilbertIndex`
+(:mod:`repro.index.sharded_mutable`) composes the two: shard-local write
+buffers routed by curve range, cross-shard sealed generations, and a
+compaction that re-balances the partition — search still one dispatch per
+chunk.  :func:`repro.index.build_auto` picks the right facade for the
+host::
 
     index = build_auto(points, IndexConfig())   # sharded iff >1 device
     ids, d2 = index.search(queries, SearchParams(k=30))
+    streaming = build_auto(points, IndexConfig(), mutable=True)
 
 Legacy entry points (``repro.core.search.build_index/search`` and
 ``repro.core.knn_graph.build_knn_graph``) are deprecation shims over this
@@ -49,6 +55,7 @@ from repro.index.facade import (  # noqa: F401
     save_index_bundle,
 )
 from repro.index.mutable import (  # noqa: F401
+    LsmIdSpace,
     MutableHilbertIndex,
     Segment,
     load_mutable_bundle,
@@ -58,13 +65,23 @@ from repro.index.sharded import (  # noqa: F401
     ShardedHilbertIndex,
     build_auto,
 )
+from repro.index.sharded_mutable import (  # noqa: F401
+    ShardedMutableHilbertIndex,
+    ShardedSegment,
+    load_sharded_mutable_as_mutable,
+    load_sharded_mutable_bundle,
+    save_sharded_mutable_bundle,
+)
 
 __all__ = [
     "HilbertIndex",
     "ShardedHilbertIndex",
+    "ShardedMutableHilbertIndex",
     "build_auto",
+    "LsmIdSpace",
     "MutableHilbertIndex",
     "Segment",
+    "ShardedSegment",
     "IndexConfig",
     "ForestConfig",
     "QuantizerConfig",
@@ -77,4 +94,6 @@ __all__ = [
     "load_index_bundle",
     "save_mutable_bundle",
     "load_mutable_bundle",
+    "save_sharded_mutable_bundle",
+    "load_sharded_mutable_bundle",
 ]

@@ -44,6 +44,13 @@ class IndexConfig:
         shard per device on the mesh's ``data`` axis when more than one
         device is visible, else a plain single-device index.  ``1`` forces
         single-device even on a multi-device host.
+      mutable: ask :func:`repro.index.build_auto` for the streaming (LSM)
+        facade instead of the immutable one — a
+        :class:`repro.index.MutableHilbertIndex` on one shard, a
+        :class:`repro.index.ShardedMutableHilbertIndex` on several — so one
+        config describes a deployment that must absorb inserts/deletes
+        while serving.  Build-time only: it changes which facade wraps the
+        arrays, never the arrays themselves.
     """
 
     forest: ForestConfig = ForestConfig()
@@ -51,18 +58,32 @@ class IndexConfig:
     store_points: bool = True
     query_chunk: int = 2048
     shards: Optional[int] = None
+    mutable: bool = False
 
     def to_dict(self) -> Dict[str, Any]:
+        """Manifest form of the config (the checkpoint round-trip).
+
+        Returns:
+          A plain-JSON dict with one key per field; nested configs become
+          nested dicts.  ``from_dict(to_dict(cfg)) == cfg`` exactly.
+        """
         return {
             "forest": dataclasses.asdict(self.forest),
             "quantizer": dataclasses.asdict(self.quantizer),
             "store_points": self.store_points,
             "query_chunk": self.query_chunk,
             "shards": self.shards,
+            "mutable": self.mutable,
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "IndexConfig":
+        """Inverse of :meth:`to_dict`; tolerant of older/newer manifests.
+
+        Unknown keys are dropped and missing keys take the field defaults,
+        so manifests written by earlier format versions (which e.g. lack
+        ``mutable``) and later ones (which may add fields) both load.
+        """
         shards = d.get("shards")
         return cls(
             forest=ForestConfig(**_filter_fields(ForestConfig, d.get("forest", {}))),
@@ -72,4 +93,5 @@ class IndexConfig:
             store_points=bool(d.get("store_points", True)),
             query_chunk=int(d.get("query_chunk", 2048)),
             shards=None if shards is None else int(shards),
+            mutable=bool(d.get("mutable", False)),
         )

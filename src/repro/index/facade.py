@@ -184,9 +184,20 @@ class HilbertIndex:
               ) -> "HilbertIndex":
         """Full Task-1 preprocessing: quantize, sketch, forest, master order.
 
-        ``config=None`` means ``IndexConfig()`` (a ``None`` sentinel, not a
-        default-argument instance, so no config object is ever shared
-        between calls).
+        The paper's §3.1 pipeline behind one call: fit the 4-bit shared-MSB
+        quantizer, derive binary sketches, build ``n_trees`` randomized
+        Hilbert trees, and store codes/sketches rearranged into the
+        un-permuted master Hilbert order (the layout Algorithm 1's stage-2
+        window expansion reads contiguously).
+
+        Args:
+          points: (n, d) fp32 corpus to index.
+          config: build configuration; ``None`` means ``IndexConfig()`` (a
+            ``None`` sentinel, not a default-argument instance, so no
+            config object is ever shared between calls).
+
+        Returns:
+          A self-describing index; its search never takes a config again.
         """
         index, _ = build_with_timings(points, config)
         return index
@@ -202,7 +213,23 @@ class HilbertIndex:
         query_chunk: Optional[int] = None,
         fused: bool = True,
     ) -> Tuple[jax.Array, jax.Array]:
-        """Batched Algorithm-1 search. Returns (ids (Q, k), sq-distances).
+        """Batched search — the paper's Algorithm 1 (forest candidates →
+        sketch Hamming filter → ±h master-order expansion → ADC → top-k).
+
+        Args:
+          queries: (Q, d) fp32 query batch.
+          params: Algorithm-1 hyper-parameters (``k1``/``k2``/``h``/``k``,
+            paper Table 1 names).
+          backend: kernel routing, one of ``BACKENDS``.
+          query_chunk: per-dispatch chunk cap (default
+            ``config.query_chunk``).
+          fused: take the single-dispatch fused path (default) or the
+            bit-identical per-tree reference loop.
+
+        Returns:
+          ``(ids (Q, k) int32, sq_distances (Q, k) float32)``, distances
+          ascending; with fewer than ``k`` points the tail is id ``-1`` /
+          ``+inf``.
 
         No config argument: the forest/quantizer settings used at build time
         travel on ``self.config``.  ``backend`` routes the kernel stages
@@ -295,7 +322,18 @@ class HilbertIndex:
         *,
         chunk: int = 1 << 16,
     ) -> Tuple[jax.Array, jax.Array]:
-        """Approximate k-NN graph over the indexed points (Task 2).
+        """Approximate k-NN graph over the indexed points — the paper's
+        Algorithm 2 (Task 2): repeated randomized Hilbert orders, ±k1
+        neighbor windows, sketch-filtered running top-k2, exact re-rank.
+
+        Args:
+          params: Algorithm-2 hyper-parameters (``n_orders``/``k1``/
+            ``k2``/``k``, paper Table 2 names).
+          chunk: rows per jitted window pass (memory/speed knob only).
+
+        Returns:
+          ``(ids (n, k) int32, sq_distances (n, k) float32)`` — each
+          indexed point's approximate k nearest neighbors, self excluded.
 
         Reuses the index's fitted quantizer → sketches and bounds instead of
         re-fitting from scratch (what the legacy ``build_knn_graph`` did).

@@ -61,6 +61,7 @@ from repro.index.facade import (
 )
 
 __all__ = [
+    "LsmIdSpace",
     "MutableHilbertIndex",
     "Segment",
     "dense_values_at",
@@ -87,6 +88,123 @@ _MANIFEST = "mutable_manifest.json"
 _SEGMENT_KIND = "mutable_segment"
 _DEFAULT_KIND = "mutable_hilbert_index"
 _MAX_IDS = 2**31 - 1  # external ids are int32
+
+
+class LsmIdSpace:
+    """External-id allocation, tombstones, and per-point values — the LSM
+    bookkeeping shared by every mutable facade.
+
+    Extracted from :class:`MutableHilbertIndex` so the sharded streaming
+    index (:class:`repro.index.ShardedMutableHilbertIndex`) reuses identical
+    semantics: ids are dense int32 assigned at insert and stable for the
+    life of the index, ``alive`` is a dense by-id tombstone mask, and
+    ``values`` (optional) is a dense by-id payload array whose tracking mode
+    is pinned by the first insert.  ``delete_epoch`` bumps on every
+    effective delete so owners can cache per-segment dead counts.
+    """
+
+    def __init__(self):
+        self.next_id = 0
+        self.alive = np.zeros((0,), np.bool_)  # dense by external id
+        self.values: Optional[np.ndarray] = None  # dense by external id
+        self.track_values: Optional[bool] = None
+        self.delete_epoch = 0  # bumps on delete; invalidates dead caches
+
+    @property
+    def n_live(self) -> int:
+        return int(np.count_nonzero(self.alive))
+
+    @property
+    def n_deleted(self) -> int:
+        return int(self.next_id - self.n_live)
+
+    def prepare(
+        self, points, values, dim: Optional[int]
+    ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Normalize + fully validate an insert WITHOUT mutating anything.
+
+        The shared preamble of both mutable facades' ``insert``: device_get
+        and promote points to (m, d) fp32, run :meth:`validate`, and check
+        against the owner's pinned ``dim`` (``None`` = not pinned yet).
+        Returns host ``(points, values)``; a raise here leaves the index
+        unchanged.  Callers then pin dim / allocate buffers and call
+        :meth:`register`.
+        """
+        pts = np.asarray(jax.device_get(points), np.float32)
+        if pts.ndim == 1:
+            pts = pts[None, :]
+        if pts.ndim != 2:
+            raise ValueError(f"points must be (m, d), got shape {pts.shape}")
+        if pts.shape[0] == 0:
+            return pts, None
+        vals = self.validate(pts.shape[0], values)
+        if dim is not None and pts.shape[1] != dim:
+            raise ValueError(
+                f"dim mismatch: index is {dim}, got {pts.shape[1]}"
+            )
+        return pts, vals
+
+    def validate(self, m: int, values) -> Optional[np.ndarray]:
+        """Pre-mutation checks for an m-row insert; returns host values.
+
+        Raises without touching any state (a failed insert must leave the
+        index unchanged — including NOT pinning the values mode).
+        """
+        if self.track_values is not None and (
+            (values is not None) != self.track_values
+        ):
+            raise ValueError(
+                "inconsistent values tracking: every insert must carry values "
+                "or none may (first insert decides)"
+            )
+        vals = None
+        if values is not None:
+            vals = np.asarray(jax.device_get(values))
+            if vals.shape[:1] != (m,):
+                raise ValueError(f"values must be (m, ...) with m={m}")
+        if self.next_id + m > _MAX_IDS:
+            raise OverflowError("external id space (int32) exhausted")
+        return vals
+
+    def register(self, m: int, vals: Optional[np.ndarray]) -> np.ndarray:
+        """Allocate m external ids; extend alive/values. Call validate first."""
+        if self.track_values is None:
+            self.track_values = vals is not None
+        ids = np.arange(self.next_id, self.next_id + m, dtype=np.int32)
+        self.next_id += m
+        self.alive = np.concatenate([self.alive, np.ones((m,), np.bool_)])
+        if vals is not None:
+            self.values = (
+                vals.copy()
+                if self.values is None
+                else np.concatenate([self.values, vals])
+            )
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone ids; returns the newly-dead count. KeyError on unknown."""
+        idn = np.atleast_1d(np.asarray(jax.device_get(ids))).astype(np.int64)
+        if idn.size == 0:
+            return 0
+        if (idn < 0).any() or (idn >= self.next_id).any():
+            bad = idn[(idn < 0) | (idn >= self.next_id)]
+            raise KeyError(f"unknown external ids: {bad[:8].tolist()}")
+        uniq = np.unique(idn)
+        newly = int(np.count_nonzero(self.alive[uniq]))
+        self.alive[uniq] = False
+        if newly:
+            self.delete_epoch += 1
+        return newly
+
+    def values_at(self, ids, fill=0) -> jax.Array:
+        if self.values is None:
+            raise ValueError("this index tracks no values (insert them)")
+        return dense_values_at(self.values, ids, fill=fill)
+
+    def values_dense(self) -> jax.Array:
+        if self.values is None:
+            raise ValueError("this index tracks no values (insert them)")
+        return jnp.asarray(self.values)
 
 
 @dataclasses.dataclass(eq=False)  # identity equality: segments hold arrays
@@ -167,12 +285,47 @@ class MutableHilbertIndex:
         self._buf_points: Optional[np.ndarray] = None  # (capacity, d) f32
         self._buf_ids: Optional[np.ndarray] = None  # (capacity,) int32
         self._buf_count = 0
-        self._alive = np.zeros((0,), np.bool_)  # dense by external id
-        self._values: Optional[np.ndarray] = None  # dense by external id
-        self._track_values: Optional[bool] = None
-        self._next_id = 0
+        self._lsm = LsmIdSpace()  # external ids / tombstones / values
         self._gen = 0
-        self._delete_epoch = 0  # bumps on delete; invalidates dead caches
+
+    # -- LsmIdSpace shims (the historical attribute names, kept so segment
+    # bookkeeping below and external pokes keep reading naturally) ----------
+
+    @property
+    def _alive(self) -> np.ndarray:
+        return self._lsm.alive
+
+    @_alive.setter
+    def _alive(self, v) -> None:
+        self._lsm.alive = v
+
+    @property
+    def _next_id(self) -> int:
+        return self._lsm.next_id
+
+    @_next_id.setter
+    def _next_id(self, v) -> None:
+        self._lsm.next_id = v
+
+    @property
+    def _values(self) -> Optional[np.ndarray]:
+        return self._lsm.values
+
+    @_values.setter
+    def _values(self, v) -> None:
+        self._lsm.values = v
+
+    @property
+    def _track_values(self) -> Optional[bool]:
+        return self._lsm.track_values
+
+    @_track_values.setter
+    def _track_values(self, v) -> None:
+        self._lsm.track_values = v
+
+    @property
+    def _delete_epoch(self) -> int:
+        return self._lsm.delete_epoch
 
     # -- introspection -------------------------------------------------------
 
@@ -239,56 +392,37 @@ class MutableHilbertIndex:
     def _register(
         self, points, values
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Shared insert bookkeeping: dims, values mode, ids, alive mask."""
-        pts = np.asarray(jax.device_get(points), np.float32)
-        if pts.ndim == 1:
-            pts = pts[None, :]
-        if pts.ndim != 2:
-            raise ValueError(f"points must be (m, d), got shape {pts.shape}")
-        m = pts.shape[0]
-        if m == 0:
+        """Shared insert bookkeeping: dims, values mode, ids, alive mask.
+
+        ``prepare`` validates EVERYTHING before any state mutation
+        (including pinning the values mode): a failed insert must leave
+        the index unchanged.
+        """
+        pts, vals = self._lsm.prepare(points, values, self._dim)
+        if pts.shape[0] == 0:
             return pts, np.zeros((0,), np.int32)
-        if self._track_values is not None and (
-            (values is not None) != self._track_values
-        ):
-            raise ValueError(
-                "inconsistent values tracking: every insert must carry values "
-                "or none may (first insert decides)"
-            )
-        # Validate EVERYTHING before any state mutation (including pinning
-        # the values mode): a failed insert must leave the index unchanged.
-        vals = None
-        if values is not None:
-            vals = np.asarray(jax.device_get(values))
-            if vals.shape[:1] != (m,):
-                raise ValueError(f"values must be (m, ...) with m={m}")
-        if self._dim is not None and pts.shape[1] != self._dim:
-            raise ValueError(f"dim mismatch: index is {self._dim}, got {pts.shape[1]}")
-        if self._next_id + m > _MAX_IDS:
-            raise OverflowError("external id space (int32) exhausted")
         if self._dim is None:
             self._dim = int(pts.shape[1])
             self._buf_points = np.zeros(
                 (self.buffer_capacity, self._dim), np.float32
             )
             self._buf_ids = np.full((self.buffer_capacity,), -1, np.int32)
-        if self._track_values is None:
-            self._track_values = values is not None
-        ids = np.arange(self._next_id, self._next_id + m, dtype=np.int32)
-        self._next_id += m
-        self._alive = np.concatenate([self._alive, np.ones((m,), np.bool_)])
-        if vals is not None:
-            self._values = (
-                vals.copy()
-                if self._values is None
-                else np.concatenate([self._values, vals])
-            )
-        return pts, ids
+        return pts, self._lsm.register(pts.shape[0], vals)
 
     def insert(
         self, points: jax.Array, values: Optional[jax.Array] = None
     ) -> np.ndarray:
-        """Insert points (m, d); returns their stable external ids (m,) int32.
+        """Insert points; each sealed segment later rides the paper's fast
+        Hilbert-sort build (Algorithm 1 preprocessing) — what makes
+        merge-based maintenance cheap.
+
+        Args:
+          points: (m, d) fp32 rows (a single (d,) row is promoted).
+          values: optional (m, ...) per-point payloads; the first insert
+            pins whether the index tracks values.
+
+        Returns:
+          (m,) int32 stable external ids.
 
         Points land in the write buffer (searchable immediately, exactly);
         each buffer fill seals a segment, and tier merging keeps the segment
@@ -339,18 +473,7 @@ class MutableHilbertIndex:
         (idempotent).  Rows are physically dropped at the next flush (buffer
         rows) or compaction touching their segment.
         """
-        idn = np.atleast_1d(np.asarray(jax.device_get(ids))).astype(np.int64)
-        if idn.size == 0:
-            return 0
-        if (idn < 0).any() or (idn >= self._next_id).any():
-            bad = idn[(idn < 0) | (idn >= self._next_id)]
-            raise KeyError(f"unknown external ids: {bad[:8].tolist()}")
-        uniq = np.unique(idn)
-        newly = int(np.count_nonzero(self._alive[uniq]))
-        self._alive[uniq] = False
-        if newly:
-            self._delete_epoch += 1
-        return newly
+        return self._lsm.delete(ids)
 
     def _segment_dead(self, seg: Segment) -> int:
         """Tombstone count inside a segment, cached between deletes."""
@@ -451,7 +574,16 @@ class MutableHilbertIndex:
         backend: str = "auto",
         query_chunk: Optional[int] = None,
     ) -> Tuple[jax.Array, jax.Array]:
-        """Fan-out top-k over buffer + segments, merged exactly.
+        """Fan-out Algorithm-1 top-k over buffer + segments, merged exactly.
+
+        Args:
+          queries: (Q, d) fp32 query batch.
+          params: Algorithm-1 hyper-parameters (paper Table 1 names);
+            applied per segment, with per-segment ``k`` inflation for
+            tombstones (:func:`repro.core.search.inflate_k`).
+          backend: kernel routing for the segment searches.
+          query_chunk: per-dispatch chunk cap (default
+            ``config.query_chunk``).
 
         Returns (ids (Q, k), sq-distances (Q, k)) like ``HilbertIndex.search``
         but with **external** ids; when fewer than k live points exist the
@@ -485,7 +617,7 @@ class MutableHilbertIndex:
                 if seg is None:  # segment was fully tombstoned
                     continue
                 dead = 0
-            k_seg = max(1, min(k + dead, cap))
+            k_seg = search_lib.inflate_k(k, dead, cap)
             sids, sd2 = seg.index.search(
                 q, dataclasses.replace(params, k=k_seg),
                 backend=backend, query_chunk=query_chunk,
@@ -523,15 +655,11 @@ class MutableHilbertIndex:
 
     def values_at(self, ids, fill=0) -> jax.Array:
         """Gather per-point values for search-result ids; -1 slots get fill."""
-        if self._values is None:
-            raise ValueError("this index tracks no values (insert them)")
-        return dense_values_at(self._values, ids, fill=fill)
+        return self._lsm.values_at(ids, fill=fill)
 
     def values_dense(self) -> jax.Array:
         """The dense by-external-id values array (stale rows where deleted)."""
-        if self._values is None:
-            raise ValueError("this index tracks no values (insert them)")
-        return jnp.asarray(self._values)
+        return self._lsm.values_dense()
 
     # -- adoption ------------------------------------------------------------
 
@@ -686,15 +814,10 @@ def _prune_unreferenced(path: str, manifest: Dict, prev_manifest: Dict) -> None:
         for name in os.listdir(seg_root):
             if name.startswith("seg_") and name not in keep_segs:
                 shutil.rmtree(os.path.join(seg_root, name), ignore_errors=True)
-    keep_steps = {manifest["state_step"], prev_manifest.get("state_step")}
-    state_root = os.path.join(path, "state")
-    if os.path.isdir(state_root):
-        for name in os.listdir(state_root):
-            if not name.startswith("step_") or name.endswith(".tmp"):
-                continue
-            if int(name.split("_")[1]) not in keep_steps:
-                shutil.rmtree(os.path.join(state_root, name),
-                              ignore_errors=True)
+    checkpoint.prune_steps(
+        os.path.join(path, "state"),
+        {manifest["state_step"], prev_manifest.get("state_step")},
+    )
 
 
 def _segment_bundle_uid(seg_dir: str) -> Optional[str]:

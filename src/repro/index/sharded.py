@@ -77,7 +77,13 @@ from repro.index.facade import (
     save_index_bundle,
 )
 
-__all__ = ["ShardedHilbertIndex", "ShardStack", "build_auto"]
+__all__ = [
+    "ShardedHilbertIndex",
+    "ShardStack",
+    "build_auto",
+    "shard_index_from_stack",
+    "stack_shard_indexes",
+]
 
 _SHARDED_MANIFEST = "sharded_manifest.json"
 _SHARD_KIND = "sharded_index_shard"
@@ -111,6 +117,78 @@ class ShardStack(NamedTuple):
     master_order: jax.Array  # (S, n_pad) int32: position -> local row
     master_rank: jax.Array   # (S, n_pad) int32: local row -> position
     id_map: jax.Array        # (S, n_pad) int32: local row -> GLOBAL id
+
+
+def stack_shard_indexes(
+    mesh: Mesh,
+    shard_indexes: List[HilbertIndex],
+    id_maps: np.ndarray,           # (S, n_pad) int32 local row -> id
+    *,
+    store_points: bool,
+) -> Tuple[ShardStack, Optional[jax.Array]]:
+    """Stack per-shard :class:`HilbertIndex` leaves over the mesh.
+
+    Returns ``(stack, points)`` with every leaf ``(S, ...)`` and laid out
+    ``P('data')``.  ``id_maps`` may carry either global row ids (the static
+    :class:`ShardedHilbertIndex`) or stable external ids (the sharded
+    mutable facade's sealed generations) — the stack is agnostic; its
+    ``id_map`` is simply what local search hits are gathered through.
+    """
+    data_sh = NamedSharding(mesh, P("data"))
+
+    def stack_leaf(get):
+        return jax.device_put(
+            jnp.stack([get(ix) for ix in shard_indexes]), data_sh
+        )
+
+    stack = ShardStack(
+        orders=stack_leaf(lambda ix: ix.forest.orders),
+        directories=stack_leaf(lambda ix: ix.forest.directories),
+        lo=stack_leaf(lambda ix: ix.forest.lo),
+        hi=stack_leaf(lambda ix: ix.forest.hi),
+        sketches=stack_leaf(lambda ix: ix.sketches_master),
+        codes=stack_leaf(lambda ix: ix.codes_master),
+        master_order=stack_leaf(lambda ix: ix.master_order),
+        master_rank=stack_leaf(lambda ix: ix.master_rank),
+        id_map=jax.device_put(jnp.asarray(id_maps, jnp.int32), data_sh),
+    )
+    points = stack_leaf(lambda ix: ix.points) if store_points else None
+    return stack, points
+
+
+def shard_index_from_stack(
+    config: IndexConfig,
+    stack: ShardStack,
+    points: Optional[jax.Array],
+    quant: quantize.Quantizer,
+    perms: jax.Array,
+    flips: jax.Array,
+    s: int,
+) -> HilbertIndex:
+    """Shard ``s``'s slice of a stack as a self-contained v2 HilbertIndex.
+
+    The inverse of :func:`stack_shard_indexes` for one shard — used by both
+    sharded checkpoint writers (static v3, mutable v4) so every per-shard
+    bundle on disk is an ordinary loadable index checkpoint.
+    """
+    return HilbertIndex(
+        config=dataclasses.replace(config, shards=None),
+        forest=forest_lib.HilbertForest(
+            perms=perms, flips=flips,
+            orders=jnp.asarray(np.asarray(stack.orders[s])),
+            directories=jnp.asarray(np.asarray(stack.directories[s])),
+            lo=jnp.asarray(np.asarray(stack.lo[s])),
+            hi=jnp.asarray(np.asarray(stack.hi[s])),
+        ),
+        quant=quant,
+        codes_master=jnp.asarray(np.asarray(stack.codes[s])),
+        sketches_master=jnp.asarray(np.asarray(stack.sketches[s])),
+        master_order=jnp.asarray(np.asarray(stack.master_order[s])),
+        master_rank=jnp.asarray(np.asarray(stack.master_rank[s])),
+        points=(
+            None if points is None else jnp.asarray(np.asarray(points[s]))
+        ),
+    )
 
 
 @dataclasses.dataclass
@@ -219,6 +297,16 @@ class ShardedHilbertIndex:
     ) -> "ShardedHilbertIndex":
         """Partition rows over the mesh's ``data`` axis and build every shard.
 
+        Args:
+          points: (n, d) fp32 corpus; global row ids are ``0..n-1``.
+          config: build configuration (``None`` = ``IndexConfig()``).
+          mesh: explicit ``('data',)`` mesh; default derives one from
+            ``config.shards`` (else every local device).
+
+        Returns:
+          The partitioned index; per-shard Algorithm-1 preprocessing runs
+          once per shard over its contiguous master-curve run.
+
         The shard count is ``config.shards`` if set, else the mesh's
         ``data`` axis size (default mesh: every local device).  The
         quantizer is fit ONCE on the full corpus and shared by all shards.
@@ -297,28 +385,10 @@ class ShardedHilbertIndex:
         cls, config, mesh, quant, shard_indexes, id_maps, n, n_valid, pad_max
     ) -> "ShardedHilbertIndex":
         """Stack per-shard index leaves and lay them out over the mesh."""
-        data_sh = NamedSharding(mesh, P("data"))
         repl = NamedSharding(mesh, P())
-
-        def stack_leaf(get):
-            return jax.device_put(
-                jnp.stack([get(ix) for ix in shard_indexes]), data_sh
-            )
-
-        stack = ShardStack(
-            orders=stack_leaf(lambda ix: ix.forest.orders),
-            directories=stack_leaf(lambda ix: ix.forest.directories),
-            lo=stack_leaf(lambda ix: ix.forest.lo),
-            hi=stack_leaf(lambda ix: ix.forest.hi),
-            sketches=stack_leaf(lambda ix: ix.sketches_master),
-            codes=stack_leaf(lambda ix: ix.codes_master),
-            master_order=stack_leaf(lambda ix: ix.master_order),
-            master_rank=stack_leaf(lambda ix: ix.master_rank),
-            id_map=jax.device_put(jnp.asarray(id_maps), data_sh),
+        stack, points = stack_shard_indexes(
+            mesh, shard_indexes, id_maps, store_points=config.store_points
         )
-        points = None
-        if config.store_points:
-            points = stack_leaf(lambda ix: ix.points)
         return cls(
             config=config, mesh=mesh,
             quant=jax.device_put(quant, repl),
@@ -339,7 +409,19 @@ class ShardedHilbertIndex:
         backend: str = "auto",
         query_chunk: Optional[int] = None,
     ) -> Tuple[jax.Array, jax.Array]:
-        """Mesh-wide Algorithm-1 search; returns (global ids (Q, k), sq-dists).
+        """Mesh-wide Algorithm-1 search.
+
+        Args:
+          queries: (Q, d) fp32 batch, replicated across the mesh.
+          params: Algorithm-1 hyper-parameters (paper Table 1 names);
+            each shard searches for ``k + pad_max`` candidates.
+          backend: kernel routing for the per-shard fused pipeline.
+          query_chunk: per-dispatch chunk cap (default
+            ``config.query_chunk``).
+
+        Returns:
+          ``(ids (Q, k) int32, sq_distances (Q, k) float32)`` with GLOBAL
+          row ids, distances ascending; shortfalls pad id -1 / +inf.
 
         One jitted dispatch per query chunk (``last_dispatch_count`` records
         the count for the most recent call): the whole shard_map — per-shard
@@ -434,27 +516,11 @@ class ShardedHilbertIndex:
         """Shard ``s`` as a self-contained v2 HilbertIndex (+ its gid map)."""
         if self.single is not None:
             return self.single, np.arange(self.n_points, dtype=np.int32)
-        st = self.stack
-        index = HilbertIndex(
-            config=dataclasses.replace(self.config, shards=None),
-            forest=forest_lib.HilbertForest(
-                perms=self.perms, flips=self.flips,
-                orders=jnp.asarray(np.asarray(st.orders[s])),
-                directories=jnp.asarray(np.asarray(st.directories[s])),
-                lo=jnp.asarray(np.asarray(st.lo[s])),
-                hi=jnp.asarray(np.asarray(st.hi[s])),
-            ),
-            quant=self.quant,
-            codes_master=jnp.asarray(np.asarray(st.codes[s])),
-            sketches_master=jnp.asarray(np.asarray(st.sketches[s])),
-            master_order=jnp.asarray(np.asarray(st.master_order[s])),
-            master_rank=jnp.asarray(np.asarray(st.master_rank[s])),
-            points=(
-                None if self.points is None
-                else jnp.asarray(np.asarray(self.points[s]))
-            ),
+        index = shard_index_from_stack(
+            self.config, self.stack, self.points, self.quant,
+            self.perms, self.flips, s,
         )
-        return index, np.asarray(st.id_map[s], np.int32)
+        return index, np.asarray(self.stack.id_map[s], np.int32)
 
     def save(self, path: str, *, kind: str = _DEFAULT_KIND,
              extra_meta: Optional[Dict] = None) -> str:
@@ -599,17 +665,38 @@ def build_auto(
     config: Optional[IndexConfig] = None,
     *,
     mesh: Optional[Mesh] = None,
+    mutable: Optional[bool] = None,
+    values: Optional[jax.Array] = None,
+    buffer_capacity: int = 1024,
+    max_segments: int = 8,
 ):
     """The ``backend="auto"`` of index construction.
 
-    Returns a :class:`ShardedHilbertIndex` when the resolved shard count
-    (``config.shards``, else the mesh's ``data`` axis, else every local
-    device) exceeds 1, and a plain single-device :class:`HilbertIndex`
-    otherwise — so the same call site scales from a laptop to a pod
-    without branching.
+    Args:
+      points: (n, d) corpus to index.
+      config: build configuration; ``None`` means ``IndexConfig()``.
+      mesh: explicit ``('data',)`` mesh; default derives one from
+        ``config.shards`` (else every local device).
+      mutable: build the streaming (LSM) facade; ``None`` defers to
+        ``config.mutable``.
+      values: optional (n, ...) per-point payloads (mutable facades only).
+      buffer_capacity: write-buffer rows (per shard when sharded);
+        mutable facades only.
+      max_segments: sealed-segment cap before tier merging; mutable only.
+
+    Returns:
+      The facade matching the resolved shard count (``config.shards``,
+      else the mesh's ``data`` axis, else every local device) and
+      mutability: :class:`HilbertIndex`, :class:`ShardedHilbertIndex`,
+      :class:`repro.index.MutableHilbertIndex`, or
+      :class:`repro.index.ShardedMutableHilbertIndex` — so the same call
+      site scales from a laptop to a pod, static or streaming, without
+      branching.
     """
     if config is None:
         config = IndexConfig()
+    if mutable is None:
+        mutable = config.mutable
     if mesh is not None:
         n_shards = int(mesh.shape["data"])
     elif config.shards is not None:
@@ -617,5 +704,21 @@ def build_auto(
     else:
         n_shards = jax.device_count()
     if n_shards > 1:
+        if mutable:
+            from repro.index.sharded_mutable import ShardedMutableHilbertIndex
+
+            return ShardedMutableHilbertIndex.build(
+                points, config, mesh=mesh, values=values,
+                buffer_capacity=buffer_capacity, max_segments=max_segments,
+            )
         return ShardedHilbertIndex.build(points, config, mesh=mesh)
-    return HilbertIndex.build(points, dataclasses.replace(config, shards=None))
+    config = dataclasses.replace(config, shards=None)
+    if mutable:
+        from repro.index.mutable import MutableHilbertIndex
+
+        mut = MutableHilbertIndex(
+            config, buffer_capacity=buffer_capacity, max_segments=max_segments
+        )
+        mut.bulk_load(points, values)
+        return mut
+    return HilbertIndex.build(points, config)

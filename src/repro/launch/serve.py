@@ -10,6 +10,10 @@ feature).  ``--shards N`` row-partitions the datastore over N devices of
 the ``data`` mesh (run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a CPU smoke):
 lookups then go through the sharded index's mesh-wide merged top-k.
+``--churn`` exercises the streaming write path mid-decode — every few
+steps the datastore absorbs an append and a delete while serving, on
+either layout (the sharded store routes appends to the shard owning each
+key's curve range; no rebuild-and-swap).
 """
 
 from __future__ import annotations
@@ -40,6 +44,9 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=1,
                     help="row-partition the retrieval datastore over this "
                          "many devices (1 = single-device mutable store)")
+    ap.add_argument("--churn", action="store_true",
+                    help="append/delete datastore entries while decoding "
+                         "(streaming writes on either layout)")
     ap.add_argument("--lam", type=float, default=0.25)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -82,11 +89,15 @@ def main() -> None:
             from repro.launch.mesh import data_mesh
 
             mesh = data_mesh(args.shards)
+        # Compaction re-sorts raw keys, so the churn demo keeps them
+        # resident; otherwise store_points=False serves RAM-lean (appends
+        # and deletes still work on both layouts).
+        store_points = args.churn
         store = RetrievalStore.build(
-            keys, vals, IndexConfig(forest=fc, store_points=False),
+            keys, vals, IndexConfig(forest=fc, store_points=store_points),
             mesh=mesh, shards=args.shards,
         )
-        layout = (f"sharded x{args.shards}" if store.is_sharded
+        layout = (f"sharded-mutable x{args.shards}" if store.is_sharded
                   else "mutable (single device)")
         print(f"[retrieval] datastore: {keys.shape[0]} entries, {layout}")
 
@@ -101,6 +112,7 @@ def main() -> None:
     sp_params = SearchParams(k1=32, k2=64, h=1, k=8)
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
     out_tokens = [tok]
+    churned: list = []
     t0 = time.time()
     for t in range(sp, total):
         logits_t, caches, hid = decode(params, tok, jnp.int32(t), caches)
@@ -109,10 +121,24 @@ def main() -> None:
                               hid.astype(jnp.float32), store, sp_params,
                               lam=args.lam)
             tok = jnp.argmax(logp, axis=-1)[:, None].astype(jnp.int32)
+            if args.churn and (t - sp) % 4 == 0:
+                # streaming writes while serving: the decoded (hidden ->
+                # token) pairs join the datastore; the previous churn
+                # batch is evicted (a rolling-window datastore)
+                new_ids = store.append(hid.astype(jnp.float32), tok[:, 0])
+                if churned:
+                    store.delete(churned.pop())
+                churned.append(new_ids)
         else:
             tok = jnp.argmax(logits_t, axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(tok)
     dt = time.time() - t0
+    if store is not None and args.churn:
+        rep = store.memory_report()
+        print(f"[churn] live={rep['n_live']} deleted={rep['n_deleted']} "
+              f"buffered={rep['n_buffered']} segments={rep['n_segments']}")
+        store.compact()
+        print(f"[churn] compacted -> segments={store.memory_report()['n_segments']}")
     gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
     print(f"[decode] {args.gen} steps x batch {b}: {1000*dt/args.gen:.0f} ms/step")
     print("[tokens]", gen[0][:16], "...")

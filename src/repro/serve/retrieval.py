@@ -9,23 +9,24 @@ model's softmax (Khandelwal et al., 2020):
     p(w) = (1-λ)·p_model(w) + λ·p_knn(w),
     p_knn ∝ Σ_{(h_i,w_i) ∈ kNN} 1[w_i=w]·exp(-d(h, h_i)/T)
 
-Two backing layouts, one ``lookup`` contract:
+Two backing layouts, one streaming contract:
 
 * **Mutable (default, single device)** — a
-  :class:`repro.index.MutableHilbertIndex` carrying next-token values, so a
-  deployment can **grow and shrink while serving**: :meth:`append` absorbs
-  new pairs into the write buffer and :meth:`delete` tombstones stale
-  entries — no offline rebuild.
-* **Sharded (``shards > 1``)** — a
-  :class:`repro.index.ShardedHilbertIndex` row-partitioned over the mesh's
-  ``data`` axis: datastores larger than one device's RAM serve with kNN-LM
-  lookups going through the mesh-wide merged top-k (one jitted dispatch per
-  query chunk).  This layout is static — appends/deletes require a rebuild
-  (rebuild-and-swap is the intended maintenance path at that scale).
+  :class:`repro.index.MutableHilbertIndex` carrying next-token values.
+* **Sharded-mutable (``shards > 1``)** — a
+  :class:`repro.index.ShardedMutableHilbertIndex` row-partitioned over the
+  mesh's ``data`` axis: datastores larger than one device's RAM serve with
+  kNN-LM lookups going through the mesh-wide merged top-k (one jitted
+  dispatch per query chunk), and — since the sharded layout grew LSM writes
+  — :meth:`RetrievalStore.append`/:meth:`RetrievalStore.delete` work on
+  BOTH layouts: a deployment grows and shrinks while serving with no
+  offline rebuild at any scale.  :meth:`RetrievalStore.compact` re-balances
+  the sharded partition in a maintenance window.
 
 ``save()``/``load()`` round-trips both layouts; one build job feeds many
-serving workers, and a sharded checkpoint RESHARDS on load if the worker
-mesh differs from the build mesh.
+serving workers, a sharded checkpoint RESHARDS on load if the worker mesh
+differs from the build mesh, and pre-PR-5 static sharded store checkpoints
+(format_version 3) are adopted into the mutable layout transparently.
 """
 
 from __future__ import annotations
@@ -40,14 +41,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import checkpoint
 from repro.core.types import ForestConfig, SearchParams
 from repro.index import (
     IndexConfig,
     MutableHilbertIndex,
     ShardedHilbertIndex,
+    ShardedMutableHilbertIndex,
     load_index_bundle,
     load_mutable_bundle,
+    load_sharded_mutable_bundle,
 )
 
 _STORE_KIND = "retrieval_store"
@@ -55,6 +57,7 @@ _SHARDED_STORE_KIND = "retrieval_store_sharded"
 _VALUES_DIR = "store_values"
 _MUTABLE_MANIFEST = "mutable_manifest.json"
 _SHARDED_MANIFEST = "sharded_manifest.json"
+_SHARDED_MUTABLE_MANIFEST = "sharded_mutable_manifest.json"
 
 
 def _remove_if_exists(path: str) -> None:
@@ -64,11 +67,44 @@ def _remove_if_exists(path: str) -> None:
         pass
 
 
+def _remove_stale_layouts(path: str, keep: str) -> None:
+    """Drop the OTHER layouts' manifests AND orphaned payloads post-commit.
+
+    Called after a save's own manifest has committed.  Beyond the stale
+    manifests, two payload classes would otherwise leak forever because no
+    current writer's pruning pass covers them: the v3 static store's
+    ``shards/`` + ``store_values/`` trees (their writer no longer exists),
+    and the other mutable layout's segment bundles (``seg_*`` vs ``gen_*``
+    prefixes — each saver prunes only its own).  The shared ``state/`` dir
+    needs nothing here: every saver prunes it against its own keep-set on
+    the next save.
+    """
+    if keep != "mutable":
+        _remove_if_exists(os.path.join(path, _MUTABLE_MANIFEST))
+    if keep != "sharded_mutable":
+        _remove_if_exists(os.path.join(path, _SHARDED_MUTABLE_MANIFEST))
+    _remove_if_exists(os.path.join(path, _SHARDED_MANIFEST))
+    shutil.rmtree(os.path.join(path, "shards"), ignore_errors=True)
+    shutil.rmtree(os.path.join(path, _VALUES_DIR), ignore_errors=True)
+    stale_prefix = "gen_" if keep == "mutable" else "seg_"
+    seg_root = os.path.join(path, "segments")
+    if os.path.isdir(seg_root):
+        for name in os.listdir(seg_root):
+            if name.startswith(stale_prefix):
+                shutil.rmtree(os.path.join(seg_root, name),
+                              ignore_errors=True)
+
+
 @dataclasses.dataclass
 class RetrievalStore:
+    """A streaming kNN-LM datastore over either mutable index layout.
+
+    Exactly one of ``index`` (single-device LSM) / ``sharded``
+    (row-partitioned LSM) is set; every public method is layout-agnostic.
+    """
+
     index: Optional[MutableHilbertIndex] = None
-    sharded: Optional[ShardedHilbertIndex] = None
-    sharded_values: Optional[np.ndarray] = None  # dense by datastore id
+    sharded: Optional[ShardedMutableHilbertIndex] = None
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array,
@@ -76,20 +112,26 @@ class RetrievalStore:
               *, buffer_capacity: int = 4096, max_segments: int = 8,
               shards: Optional[int] = None, mesh=None,
               ) -> "RetrievalStore":
-        """keys: (n, d) hidden states; values: (n,) next tokens.
+        """Build a datastore over (hidden-state, next-token) pairs.
 
-        ``config`` may be a full :class:`IndexConfig` or (for one release of
-        backward compatibility) a bare ``ForestConfig``.
+        Args:
+          keys: (n, d) fp32 hidden states.
+          values: (n,) next tokens (any dense per-entry payload works).
+          config: a full :class:`IndexConfig` or (for one release of
+            backward compatibility) a bare ``ForestConfig``.
+          buffer_capacity: write-buffer rows (per shard when sharded).
+          max_segments: sealed-segment cap before tier merging.
+          shards: row-partition count; ``shards`` / ``config.shards`` /
+            a ``mesh`` > 1 device selects the sharded-mutable layout,
+            default is the single-device mutable store.
+          mesh: explicit ``('data',)`` mesh for the sharded layout.
 
-        ``shards`` (or ``config.shards``, or a ``mesh``) > 1 builds the
-        row-partitioned sharded datastore; the default resolves to the
-        single-device mutable store.  The mutable path bulk-loads the
-        corpus into one sealed segment so lookup latency matches a static
-        index; later :meth:`append` batches stream through the write
-        buffer.  The default config keeps raw fp32 keys so the mutable
-        store can :meth:`compact` (and the sharded store can reshard on
-        load); pass ``IndexConfig(store_points=False)`` to reclaim that
-        RAM for deployments that never do either.
+        Returns:
+          A store whose corpus is one sealed segment (lookup latency
+          matches a static index); later :meth:`append` batches stream
+          through the write buffer(s).  The default config keeps raw fp32
+          keys so both layouts can :meth:`compact` (and the sharded one
+          can reshard on load).
         """
         if config is None:
             config = IndexConfig()
@@ -102,14 +144,11 @@ class RetrievalStore:
             )
         if shards > 1:
             config = dataclasses.replace(config, shards=shards)
-            sharded = ShardedHilbertIndex.build(keys, config, mesh=mesh)
-            vals = np.asarray(jax.device_get(values))
-            if vals.shape[:1] != (sharded.n_points,):
-                raise ValueError(
-                    f"values must be ({sharded.n_points}, ...), "
-                    f"got {vals.shape}"
-                )
-            return cls(sharded=sharded, sharded_values=vals.copy())
+            sharded = ShardedMutableHilbertIndex.build(
+                keys, config, mesh=mesh, values=values,
+                buffer_capacity=buffer_capacity, max_segments=max_segments,
+            )
+            return cls(sharded=sharded)
         index = MutableHilbertIndex(
             config, buffer_capacity=buffer_capacity, max_segments=max_segments
         )
@@ -121,147 +160,172 @@ class RetrievalStore:
         return self.sharded is not None
 
     @property
+    def _impl(self):
+        """The backing mutable index, whichever layout it is."""
+        return self.sharded if self.is_sharded else self.index
+
+    @property
     def values(self) -> jax.Array:
         """Dense next-token array keyed by datastore id (kNN-LM gather)."""
-        if self.is_sharded:
-            return jnp.asarray(self.sharded_values)
-        return self.index.values_dense()
+        return self._impl.values_dense()
 
     def values_at(self, ids, fill=0) -> jax.Array:
         """Gather per-entry values for search-result ids; -1 slots get fill."""
-        if not self.is_sharded:
-            return self.index.values_at(ids, fill=fill)
-        from repro.index.mutable import dense_values_at
-
-        return dense_values_at(self.sharded_values, ids, fill=fill)
-
-    def _require_mutable(self, op: str) -> MutableHilbertIndex:
-        if self.is_sharded:
-            raise ValueError(
-                f"{op}() is not available on a sharded RetrievalStore: the "
-                "row-partitioned layout is static — rebuild-and-swap "
-                "(RetrievalStore.build + save/load) to change the corpus"
-            )
-        return self.index
+        return self._impl.values_at(ids, fill=fill)
 
     def append(self, keys: jax.Array, values: jax.Array) -> np.ndarray:
-        """Stream new (hidden, token) pairs in while serving; returns ids."""
-        return self._require_mutable("append").insert(keys, values)
+        """Stream new (hidden, token) pairs in while serving; returns ids.
+
+        Works on BOTH layouts: single-device batches land in the write
+        buffer; sharded batches are routed to the shard owning each key's
+        curve range and land in that shard's buffer.
+        """
+        return self._impl.insert(keys, values)
 
     def delete(self, ids) -> int:
         """Tombstone datastore entries (stale documents, TTL eviction)."""
-        return self._require_mutable("delete").delete(ids)
+        return self._impl.delete(ids)
 
     def compact(self) -> "RetrievalStore":
-        """Merge segments / drop tombstones (e.g. in a maintenance window)."""
-        self._require_mutable("compact").compact()
+        """Merge segments / drop tombstones (e.g. in a maintenance window).
+
+        On the sharded layout this also re-runs the global Hilbert
+        partition, re-balancing entries across shards.
+        """
+        self._impl.compact()
         return self
 
     def lookup(self, queries: jax.Array, params: SearchParams
                ) -> Tuple[jax.Array, jax.Array]:
-        """(Q, d) hidden states -> (ids (Q,k), sq-dists (Q,k)).
+        """(Q, d) hidden states -> (ids (Q, k), sq-dists (Q, k)).
 
         When fewer than k live entries exist, the tail is id -1 / +inf —
         :func:`knn_lm_mix` masks those slots.  Both layouts run the fused
         single-dispatch path over packed-resident codes (per segment on the
-        mutable store; per shard + cross-shard merge on the sharded one),
-        and batch sizes are bucketed to powers of two, so interactive
-        decode loops with varying batch shapes don't accumulate jit traces.
+        mutable store; per shard per generation + cross-shard merge on the
+        sharded one), and batch sizes are bucketed to powers of two, so
+        interactive decode loops with varying batch shapes don't accumulate
+        jit traces.
         """
-        if self.is_sharded:
-            return self.sharded.search(queries, params)
-        return self.index.search(queries, params)
+        return self._impl.search(queries, params)
 
     def memory_report(self) -> dict:
         """Serving-RAM accounting for whichever layout backs the store.
 
-        Mutable: segments + buffer + values + tombstones.  Sharded: the
-        partitioned accounting — ``per_device_bytes`` is what each device
-        in the mesh actually holds (≈ total / n_shards + the replicated
-        quantizer), the number to compare against a PER-DEVICE RAM budget
-        instead of the paper's single 16 GB box.
+        Both layouts report segments + buffer + values + tombstones; the
+        sharded one additionally splits sharded vs replicated bytes, with
+        ``per_device_bytes`` the number to compare against a PER-DEVICE RAM
+        budget instead of the paper's single 16 GB box.
         """
-        if self.is_sharded:
-            rep = dict(self.sharded.memory_report())
-            rep["values_bytes"] = int(self.sharded_values.nbytes)
-            rep["total_bytes"] = rep["resident_bytes"] + rep["values_bytes"]
-            return rep
-        return self.index.memory_report()
+        return self._impl.memory_report()
 
     def save(self, path: str) -> str:
         """Persist the store as ONE manifest-committed save.
 
         Every piece is an atomic ``repro.checkpoint`` bundle and the
         top-level manifest is renamed into place last, so a crash mid-save
-        or a concurrent :meth:`load` in another worker can never observe the
-        index and its values out of sync.  The sharded path writes the
-        values to a FRESH step before its manifest commits (the step a
-        previous manifest references is never rewritten; unreferenced
-        steps are pruned after the commit, one generation of grace), and a
-        save that SWITCHES layout removes the other layout's manifest
-        after committing its own — rebuild-and-swap over an old mutable
-        save can never leave a loader preferring the stale store.
+        or a concurrent :meth:`load` in another worker can never observe a
+        half-written store.  Values ride inside the index's own state
+        sidecar on both layouts.  A save that SWITCHES layout (or upgrades
+        a v3 static checkpoint in place) removes the other layouts'
+        manifests AND their now-unreachable payload bundles after
+        committing its own — rebuild-and-swap over an old save can never
+        leave a loader preferring stale data, nor orphaned bundles eating
+        disk.
         """
         if not self.is_sharded:
             out = self.index.save(path, kind=_STORE_KIND)
-            _remove_if_exists(os.path.join(path, _SHARDED_MANIFEST))
+            _remove_stale_layouts(path, keep="mutable")
             return out
-        os.makedirs(path, exist_ok=True)
-        prev_step = None
-        try:
-            with open(os.path.join(path, _SHARDED_MANIFEST)) as f:
-                prev_step = json.load(f).get("extra_meta", {}).get(
-                    "values_step"
-                )
-        except (OSError, ValueError):
-            pass
-        vdir = os.path.join(path, _VALUES_DIR)
-        vstep = (checkpoint.latest_step(vdir) or 0) + 1
-        checkpoint.save(
-            vdir, step=vstep, tree={"values": self.sharded_values},
-            extra={"kind": _SHARDED_STORE_KIND},
-        )
-        out = self.sharded.save(
-            path, kind=_SHARDED_STORE_KIND,
-            extra_meta={"values_step": vstep},
-        )
-        _remove_if_exists(os.path.join(path, _MUTABLE_MANIFEST))
-        keep = {vstep, prev_step}
-        for name in os.listdir(vdir):
-            if (name.startswith("step_") and not name.endswith(".tmp")
-                    and int(name.split("_")[1]) not in keep):
-                shutil.rmtree(os.path.join(vdir, name), ignore_errors=True)
+        out = self.sharded.save(path, kind=_SHARDED_STORE_KIND)
+        _remove_stale_layouts(path, keep="sharded_mutable")
         return out
 
     @classmethod
     def load(cls, path: str, *, mesh=None) -> "RetrievalStore":
-        mpath = os.path.join(path, _MUTABLE_MANIFEST)
-        spath = os.path.join(path, _SHARDED_MANIFEST)
-        has_mut, has_sh = os.path.exists(mpath), os.path.exists(spath)
-        if has_mut and has_sh:
-            # Only reachable if a layout-switching save crashed between its
-            # manifest commit and the stale-manifest cleanup; the newer
-            # manifest is the one that committed.
-            has_mut = os.path.getmtime(mpath) >= os.path.getmtime(spath)
-            has_sh = not has_mut
-        if has_mut:
-            index, _ = load_mutable_bundle(path, kind=_STORE_KIND)
-            return cls(index=index)
-        if has_sh:
-            from repro.index.mutable import _restore_state_bundle
+        """Load any store checkpoint generation onto the current mesh.
 
-            with open(spath) as f:
-                manifest = json.load(f)
-            sharded = ShardedHilbertIndex.load(
+        Resolution order (newest manifest wins if a crashed layout-switch
+        left two): v4 sharded-mutable store, v1 mutable store, v3 static
+        sharded store (adopted into the mutable layout, values sidecar and
+        all), then the PR-1 static single-index bundle (adopted as one
+        sealed segment).  Sharded checkpoints reshard when ``mesh`` differs
+        from the build mesh; resharding onto ONE device yields the
+        single-device mutable layout.
+        """
+        # Newest manifest wins (ns resolution).  Two manifests coexist only
+        # when a layout-switching save crashed between its commit and the
+        # stale-manifest cleanup.  On an exact mtime tie (coarse-granularity
+        # filesystems) prefer the manifest whose referenced state bundle
+        # still EXISTS — the crashed switch's committed side pruned the
+        # stale side's state step, so validity identifies the committed
+        # manifest — then by format generation (a v3 static manifest is
+        # never written by current code, so a tied one is always stale).
+        def state_ok(manifest_path: str) -> bool:
+            try:
+                with open(manifest_path) as f:
+                    step = json.load(f).get("state_step")
+            except (OSError, ValueError):
+                return False
+            if step is None:
+                return True
+            return os.path.isdir(
+                os.path.join(path, "state", f"step_{int(step):08d}")
+            )
+
+        candidates = []
+        for priority, (manifest, kind) in enumerate((
+            (_SHARDED_MANIFEST, "sharded_static"),
+            (_MUTABLE_MANIFEST, "mutable"),
+            (_SHARDED_MUTABLE_MANIFEST, "sharded_mutable"),
+        )):
+            p = os.path.join(path, manifest)
+            if os.path.exists(p):
+                ok = state_ok(p) if priority else True
+                candidates.append((os.stat(p).st_mtime_ns, ok, priority,
+                                   kind))
+        layout = max(candidates)[3] if candidates else "legacy"
+        if layout == "sharded_mutable":
+            target = (
+                int(mesh.shape["data"]) if mesh is not None
+                else jax.device_count()
+            )
+            if target == 1:
+                from repro.index import load_sharded_mutable_as_mutable
+
+                return cls(index=load_sharded_mutable_as_mutable(
+                    path, kind=_SHARDED_STORE_KIND
+                ))
+            sharded, _ = load_sharded_mutable_bundle(
                 path, mesh=mesh, kind=_SHARDED_STORE_KIND
             )
-            # values restore at the manifest-referenced step, with the
-            # bundle's own declared dtype (tokens are int32 today)
+            return cls(sharded=sharded)
+        if layout == "mutable":
+            index, _ = load_mutable_bundle(path, kind=_STORE_KIND)
+            return cls(index=index)
+        if layout == "sharded_static":
+            # Pre-PR-5 static sharded store: index checkpoint + values
+            # sidecar at the manifest-referenced step.  Adopt into the
+            # mutable layout (single- or multi-shard, mesh decides).
+            from repro.index.mutable import _restore_state_bundle
+
+            with open(os.path.join(path, _SHARDED_MANIFEST)) as f:
+                manifest = json.load(f)
+            base = ShardedHilbertIndex.load(
+                path, mesh=mesh, kind=_SHARDED_STORE_KIND
+            )
             state = _restore_state_bundle(
                 os.path.join(path, _VALUES_DIR),
                 manifest.get("extra_meta", {}).get("values_step"),
             )
-            return cls(sharded=sharded, sharded_values=state["values"])
+            values = state["values"]
+            if base.single is not None:
+                return cls(index=MutableHilbertIndex.from_index(
+                    base.single, values=values
+                ))
+            return cls(sharded=ShardedMutableHilbertIndex.from_sharded(
+                base, values=values
+            ))
         # One release of backward compatibility: checkpoints written by
         # the PR-1 static RetrievalStore (a single HilbertIndex bundle +
         # values sidecar, no mutable manifest) are adopted as a single

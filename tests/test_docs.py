@@ -1,0 +1,67 @@
+"""Docs stay honest: code blocks parse, doctests pass, links resolve.
+
+Runs ``scripts/check_docs.py`` in-process over README.md + docs/*.md so
+the tier-1 suite catches doc rot (broken cross-references, stale code
+samples) the same way CI's docs job does, plus unit tests for the
+checker's own slug/link logic.
+"""
+
+import glob
+import importlib.util
+import os
+
+_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(_ROOT, "scripts", "check_docs.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_repo_docs_are_clean():
+    mod = _checker()
+    paths = [os.path.join(_ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(_ROOT, "docs", "*.md"))
+    )
+    assert len(paths) >= 3, "expected README + docs tree"
+    problems = []
+    for p in paths:
+        problems.extend(mod.check_file(p))
+    assert not problems, "\n".join(problems)
+
+
+def test_checker_flags_bad_python_block(tmp_path):
+    mod = _checker()
+    bad = tmp_path / "bad.md"
+    bad.write_text("# T\n\n```python\ndef broken(:\n```\n")
+    problems = mod.check_file(str(bad))
+    assert any("does not parse" in p for p in problems)
+
+
+def test_checker_flags_broken_link_and_anchor(tmp_path):
+    mod = _checker()
+    other = tmp_path / "other.md"
+    other.write_text("# Real Heading\n")
+    doc = tmp_path / "doc.md"
+    doc.write_text(
+        "# Title\n\n[ok](other.md#real-heading)\n"
+        "[gone](missing.md)\n[bad](other.md#nope)\n"
+    )
+    problems = mod.check_file(str(doc))
+    assert any("broken link" in p and "missing.md" in p for p in problems)
+    assert any("broken anchor" in p and "nope" in p for p in problems)
+    assert not any("real-heading" in p for p in problems)
+
+
+def test_checker_runs_doctest_blocks(tmp_path):
+    mod = _checker()
+    doc = tmp_path / "dt.md"
+    doc.write_text("```python\n>>> 1 + 1\n3\n```\n")
+    problems = mod.check_file(str(doc))
+    assert any("doctest failed" in p for p in problems)
+    doc.write_text("```python\n>>> 1 + 1\n2\n```\n")
+    assert not mod.check_file(str(doc))

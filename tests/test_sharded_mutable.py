@@ -1,0 +1,175 @@
+"""Sharded-mutable index: routing/LSM units in-process, mesh parity in a
+subprocess.
+
+The multi-device battery lives in ``scripts/sharded_mutable_check.py`` and
+runs with 8 simulated devices in a subprocess (this pytest process keeps
+its default device view): streamed-vs-fresh-rebuild bit-equality after
+compaction, one-dispatch search under churn, skewed-insert/empty-shard
+generations, format_version-4 round-trips and v3 adoption/reshard, and the
+streaming sharded RetrievalStore.  In-process tests cover the pieces that
+don't need a mesh: curve-range routing, the shared LSM id space, the
+tombstone k-inflation helper, and config plumbing.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import distributed
+from repro.core.search import inflate_k
+from repro.core.types import ForestConfig
+from repro.index import IndexConfig, LsmIdSpace
+
+
+# -- curve-range routing (the sharded-mutable write path) --------------------
+
+
+def test_route_to_shards_respects_partition_bounds():
+    # 1-D points on a line: the master Hilbert order IS the coordinate
+    # order, so contiguous curve ranges are contiguous intervals.  With
+    # bits=6 the 64 grid levels hit the 64 points exactly (key_bits may
+    # not exceed d*bits, so 1-D keys are 6 bits wide).
+    cfg = ForestConfig(n_trees=1, bits=6, key_bits=6, leaf_size=4)
+    pts = np.linspace(0.0, 1.0, 64, dtype=np.float32)[:, None]
+    lo, hi = pts.min(0), pts.max(0)
+    # shards own [0, .25), [.25, .5), [.5, .75), [.75, 1]
+    firsts = [pts[0], pts[16], pts[32], pts[48]]
+    bounds = distributed.curve_partition_bounds(firsts, cfg, lo, hi)
+    assert bounds.shape[0] == 3
+    routes = distributed.route_to_shards(pts, cfg, lo, hi, bounds)
+    expect = np.repeat(np.arange(4, dtype=np.int32), 16)
+    np.testing.assert_array_equal(routes, expect)
+    # out-of-box points clamp to the ends instead of failing
+    far = np.asarray([[-5.0], [5.0]], np.float32)
+    r = distributed.route_to_shards(far, cfg, lo, hi, bounds)
+    assert r[0] == 0 and r[1] == 3
+
+
+def test_route_agrees_with_hilbert_partition():
+    # Frozen bounds recovered from a partition route every partitioned
+    # row back to its owning shard (equal-key ties aside — continuous
+    # random data makes them measure-zero at these key widths).
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(256, 8)).astype(np.float32)
+    cfg = ForestConfig(n_trees=1, bits=4, key_bits=32, leaf_size=4)
+    parts = distributed.hilbert_partition(
+        __import__("jax").numpy.asarray(pts), cfg, n_shards=4
+    )
+    lo, hi = pts.min(0), pts.max(0)
+    firsts = [pts[p[0]] if len(p) else None for p in parts]
+    bounds = distributed.curve_partition_bounds(firsts, cfg, lo, hi)
+    owner = np.zeros((256,), np.int32)
+    for s, p in enumerate(parts):
+        owner[np.asarray(p)] = s
+    routes = distributed.route_to_shards(pts, cfg, lo, hi, bounds)
+    np.testing.assert_array_equal(owner, routes)
+
+
+def test_route_empty_shards_get_max_key_bound():
+    cfg = ForestConfig(n_trees=1, bits=6, key_bits=6, leaf_size=4)
+    pts = np.linspace(0.0, 1.0, 8, dtype=np.float32)[:, None]
+    lo, hi = pts.min(0), pts.max(0)
+    # shards 2/3 own nothing: their opening keys are MAX, so everything
+    # routes to the shards that actually own curve ranges
+    bounds = distributed.curve_partition_bounds(
+        [pts[0], pts[4], None, None], cfg, lo, hi
+    )
+    routes = distributed.route_to_shards(pts, cfg, lo, hi, bounds)
+    assert routes.max() <= 1
+
+
+def test_np_lex_ge_matches_tuple_compare():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**32, size=(64, 3), dtype=np.uint32)
+    keys[:8, 0] = 7  # force some equal leading words
+    bound = keys[5].copy()
+    got = distributed._np_lex_ge(keys, bound)
+    want = np.asarray([tuple(k) >= tuple(bound) for k in keys])
+    np.testing.assert_array_equal(got, want)
+
+
+# -- shared LSM id space -----------------------------------------------------
+
+
+def test_lsm_id_space_register_delete_values():
+    lsm = LsmIdSpace()
+    ids = lsm.register(3, lsm.validate(3, np.asarray([10, 11, 12])))
+    np.testing.assert_array_equal(ids, [0, 1, 2])
+    assert lsm.track_values is True and lsm.n_live == 3
+    with pytest.raises(ValueError):
+        lsm.validate(2, None)  # values mode pinned by first insert
+    assert lsm.delete([1]) == 1
+    assert lsm.delete([1]) == 0  # idempotent
+    assert lsm.n_live == 2 and lsm.n_deleted == 1
+    with pytest.raises(KeyError):
+        lsm.delete([99])
+    v = np.asarray(lsm.values_at(np.asarray([[2, -1]])))
+    np.testing.assert_array_equal(v, [[12, 0]])
+
+
+def test_lsm_id_space_failed_validate_mutates_nothing():
+    lsm = LsmIdSpace()
+    with pytest.raises(ValueError):
+        lsm.validate(2, np.zeros((3,)))  # wrong values length
+    assert lsm.track_values is None and lsm.next_id == 0
+
+
+# -- tombstone k inflation ---------------------------------------------------
+
+
+def test_inflate_k_contract():
+    assert inflate_k(10, 0, 100) == 10
+    assert inflate_k(10, 7, 100) == 17
+    assert inflate_k(10, 500, 100) == 100  # capped at the candidate pool
+    assert inflate_k(10, 0, 0) == 1        # floored at 1
+
+
+# -- config plumbing ---------------------------------------------------------
+
+
+def test_index_config_mutable_roundtrip():
+    cfg = IndexConfig(shards=4, mutable=True)
+    d = cfg.to_dict()
+    assert d["mutable"] is True
+    assert IndexConfig.from_dict(d) == cfg
+    # older manifests without the field default to immutable
+    del d["mutable"]
+    assert IndexConfig.from_dict(d).mutable is False
+
+
+def test_sharded_mutable_rejects_single_device_mesh():
+    from repro.index import ShardedMutableHilbertIndex
+    from repro.launch.mesh import data_mesh
+
+    if len(__import__("jax").devices()) > 1:
+        pytest.skip("needs a 1-device view")
+    with pytest.raises(ValueError, match="multi-device"):
+        ShardedMutableHilbertIndex(IndexConfig(), mesh=data_mesh(1))
+
+
+# -- the 8-virtual-device battery (subprocess keeps our device view) ---------
+
+
+def test_sharded_mutable_parity_8_devices():
+    script = os.path.join(
+        os.path.dirname(__file__), "..", "scripts", "sharded_mutable_check.py"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (
+            os.path.join(os.path.dirname(__file__), "..", "src"),
+            env.get("PYTHONPATH", ""),
+        ) if p
+    )
+    out = subprocess.run(
+        [sys.executable, script], env=env, capture_output=True, text=True,
+        timeout=1800,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL SHARDED-MUTABLE CHECKS PASSED" in out.stdout
