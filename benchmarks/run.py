@@ -18,6 +18,10 @@ API (build once → search / knn_graph off the same artifact).
              index: recall-vs-rebuild, one-dispatch invariant, routing
              locality (emits BENCH_sharded_churn.json; re-execs itself
              with 8 simulated devices)
+  serving  — concurrent write+query load through the RetrievalEngine:
+             per-request p50/p99/p999 with and without background
+             maintenance (emits BENCH_serving.json; re-execs itself
+             with 8 simulated devices)
 
 ``python -m benchmarks.run [names...]`` (default: all).
 """
@@ -28,7 +32,8 @@ import time
 
 def main() -> None:
     names = sys.argv[1:] or ["kernels", "hsort", "phases", "table2", "table1",
-                             "churn", "search", "sharded", "sharded_churn"]
+                             "churn", "search", "sharded", "sharded_churn",
+                             "serving"]
     t00 = time.time()
     for name in names:
         print(f"\n===== {name} =====", flush=True)
@@ -51,6 +56,8 @@ def main() -> None:
             from benchmarks import sharded_search as m
         elif name == "sharded_churn":
             from benchmarks import sharded_churn as m
+        elif name == "serving":
+            from benchmarks import serving as m
         else:
             raise SystemExit(f"unknown benchmark {name!r}")
         m.main()

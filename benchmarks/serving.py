@@ -1,0 +1,278 @@
+"""Concurrent write+query serving load: the engine's reason to exist.
+
+``BENCH_sharded_churn.json`` showed WHY serving needs an engine: query
+p50 degrades ~8x as sealed generations pile up, and a synchronous
+``compact()`` stalls the caller for seconds.  This benchmark measures the
+fix — the same concurrent write+query load is driven through
+:class:`repro.serve.RetrievalEngine` in three phases on the
+sharded-mutable layout:
+
+* **baseline** — query stream only, no writes: the latency floor;
+* **churn** — a background writer streams inserts/deletes while queries
+  run, background maintenance OFF: generations accumulate and tail
+  latency creeps (what the seed's serving path would experience);
+* **churn_maintained** — same write load with the maintenance thread ON:
+  tier compaction runs on a shadow copy off the query path and the
+  serving index is atomically swapped, so the generation count stays
+  bounded while NO query ever waits on a compaction.
+
+Two latency series are reported per phase:
+
+* **request** — submit -> result wall time (queue + serve-lock wait
+  included): what a caller experiences end to end;
+* **search** — the search execution itself (the engine's
+  ``batch_latency``, timed inside the serve lock): the query path
+  proper, which is what the swap protocol keeps off the compaction.
+
+plus the maintained/baseline p99 ratios for both.  The acceptance
+target is maintained p99 within 2x of the no-write baseline.  CAVEAT
+for this CPU harness: the "device" here IS the host cores, so the
+shadow compaction unavoidably contends with serving for the same
+silicon and inflates both series while it runs — on a real accelerator
+the compact's build executes beside the serving device, which is the
+deployment the 2x target describes.  The artifact records both ratios
+honestly; track the trend, not the absolute, on CPU.
+
+Results land in ``BENCH_serving.json`` (cwd).  ``--smoke`` shrinks to
+CI scale AND drops to the single-device ``MutableHilbertIndex`` layout:
+the engine is layout-agnostic (the sharded engine paths are exercised
+by ``tests/test_engine.py`` in the same CI job), and sustained
+write+compile load over 8 *virtual* CPU devices starves XLA's
+collective rendezvous for minutes at a time — a harness artifact, not
+a serving property.  The full run uses the 8-shard sharded-mutable
+layout and re-execs itself in a subprocess with
+``--xla_force_host_platform_device_count=8``.  Also runnable via
+``python -m benchmarks.run serving``.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+_WORKER_ENV = "_SERVING_BENCH_WORKER"
+
+
+def main(smoke: bool = False) -> dict:
+    if os.environ.get(_WORKER_ENV) != "1":
+        env = dict(os.environ)
+        env[_WORKER_ENV] = "1"
+        if not smoke:  # smoke runs the single-device mutable layout
+            env["XLA_FLAGS"] = (
+                env.get("XLA_FLAGS", "")
+                + " --xla_force_host_platform_device_count=8"
+            ).strip()
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (os.path.join(root, "src"),
+                        env.get("PYTHONPATH", "")) if p
+        )
+        cmd = [sys.executable, "-m", "benchmarks.serving"]
+        if smoke:
+            cmd.append("--smoke")
+        r = subprocess.run(cmd, env=env, cwd=os.getcwd())
+        if r.returncode != 0:
+            raise SystemExit(f"serving bench worker failed ({r.returncode})")
+        with open("BENCH_serving.json") as f:
+            return json.load(f)
+    return _worker(smoke)
+
+
+def _worker(smoke: bool) -> dict:
+    import threading
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.data import ann_datasets
+    from repro.index import (
+        ForestConfig,
+        IndexConfig,
+        MutableHilbertIndex,
+        SearchParams,
+        ShardedMutableHilbertIndex,
+    )
+    from repro.launch.mesh import data_mesh
+    from repro.serve import MaintenancePolicy, RetrievalEngine
+    from repro.serve.metrics import LatencyRecorder, percentiles
+
+    n_shards = 1 if smoke else min(8, jax.device_count())
+    if smoke:
+        n0, d, requests, q_batch = 4096, 24, 150, 32
+        fcfg = ForestConfig(n_trees=2, bits=4, key_bits=96, leaf_size=16)
+        params = SearchParams(k1=16, k2=64, h=1, k=10)
+        capacity, write_batch, warm_swaps, warm_cap_s = 256, 64, 2, 240.0
+    else:
+        n0, d, requests, q_batch = 32768, 96, 300, 256
+        fcfg = ForestConfig(n_trees=8, bits=4, key_bits=384, leaf_size=32)
+        params = SearchParams(k1=32, k2=192, h=2, k=10)
+        capacity, write_batch, warm_swaps, warm_cap_s = 1024, 512, 2, 600.0
+    # writer pacing: one batch per ~write_pause — heavy but bounded churn
+    # (an unthrottled writer saturates the serve lock and measures lock
+    # starvation, not serving)
+    write_pause = 0.05
+    cfg = IndexConfig(forest=fcfg)
+    mesh = None if n_shards == 1 else data_mesh(n_shards)
+    # spare rows for the churn writers (they wrap within this region)
+    total = n0 + 64 * write_batch
+    data, queries = ann_datasets.lowrank_dataset_with_queries(
+        total, q_batch, d, n_clusters=32, seed=0
+    )
+    data, queries = np.asarray(data), np.asarray(queries)
+    policy = MaintenancePolicy(
+        max_segments=4, max_tombstone_ratio=0.5, poll_interval_s=0.05
+    )
+
+    def run_phase(name, *, churn, maintained):
+        if mesh is None:
+            index = MutableHilbertIndex(
+                cfg, buffer_capacity=capacity, max_segments=16
+            )
+            index.insert(data[:n0])
+            index.compact()  # start from one sealed segment
+        else:
+            index = ShardedMutableHilbertIndex.build(
+                data[:n0], cfg, mesh=mesh,
+                buffer_capacity=capacity, max_segments=16,
+            )
+        eng = RetrievalEngine(
+            index, params,
+            maintenance=policy if maintained else None, start=True,
+        )
+        stop = threading.Event()
+        inserted_ids: list = []
+
+        def writer():
+            s = n0
+            while not stop.is_set():
+                ids = eng.insert(data[s : s + write_batch])
+                inserted_ids.append(ids)
+                if len(inserted_ids) > 2:
+                    old = inserted_ids.pop(0)  # rolling-window expiry
+                    eng.delete(old)
+                s += write_batch
+                if s + write_batch > total:
+                    s = n0  # wrap within the spare region
+                if stop.wait(write_pause):
+                    return
+
+        th = None
+        if churn:
+            th = threading.Thread(target=writer)
+            th.start()
+        # Warm-up (unmeasured): a long-running deployment's jit caches
+        # hold every recurring LSM shape.  The maintained phase reaches
+        # that steady state only after a couple of full maintenance
+        # cycles (compact shapes + post-swap buffer buckets), so keep
+        # serving unmeasured until `warm_swaps` swaps have landed (time
+        # capped); other phases just warm the query-shape dispatch.
+        warm_t0 = time.perf_counter()
+        warm_requests = 0
+        while True:
+            eng.search(queries)
+            warm_requests += 1
+            if not maintained or eng.metrics.counter("swaps") >= warm_swaps:
+                break
+            if time.perf_counter() - warm_t0 > warm_cap_s:
+                break
+        # fresh search-exec ring: measure the query path post-warmup only
+        eng.metrics.batch_latency = LatencyRecorder()
+        warm_swaps_seen = eng.metrics.counter("swaps")
+        warm_s = time.perf_counter() - warm_t0
+        lat = []
+        t0 = time.perf_counter()
+        try:
+            for r in range(requests):
+                ticket = eng.submit(queries)
+                ticket.result(timeout=600)
+                lat.append(ticket.latency_ms)
+        finally:
+            if th is not None:
+                stop.set()
+                th.join()
+            eng.stop(drain=True)
+        wall_s = time.perf_counter() - t0
+        stats = eng.maintenance_stats()
+        search_ms = eng.metrics.batch_latency.samples()
+        row = {
+            "phase": name,
+            "requests": requests,
+            "warmup_requests": warm_requests,
+            "warmup_s": float(warm_s),
+            "rows_per_request": q_batch,
+            "wall_s": float(wall_s),
+            "qps": float(requests / wall_s),
+            **percentiles(lat),
+            "max_ms": float(np.max(lat)),
+            "search": percentiles(search_ms),
+            "swaps_in_window": (
+                eng.metrics.counter("swaps") - warm_swaps_seen
+            ),
+            "swaps": eng.metrics.counter("swaps"),
+            "maintenance_runs": eng.metrics.counter("maintenance_runs"),
+            "inserts": eng.metrics.counter("inserts"),
+            "deletes": eng.metrics.counter("deletes"),
+            "end_segments": int(stats.get("n_segments", 0)),
+            "end_live": int(stats.get("n_live", 0)),
+        }
+        print(
+            f"{name}: p50={row['p50']:.1f}ms p99={row['p99']:.1f}ms "
+            f"p999={row['p999']:.1f}ms qps={row['qps']:.1f} "
+            f"swaps={row['swaps']} segments={row['end_segments']} "
+            f"(inserts={row['inserts']})",
+            flush=True,
+        )
+        return row
+
+    print(f"serving load: {requests} requests x {q_batch} queries, "
+          f"{n_shards} shard(s), corpus n0={n0} d={d}", flush=True)
+    baseline = run_phase("baseline", churn=False, maintained=False)
+    churn = run_phase("churn", churn=True, maintained=False)
+    maintained = run_phase("churn_maintained", churn=True, maintained=True)
+
+    ratio_churn = churn["p99"] / max(baseline["p99"], 1e-9)
+    ratio_maintained = maintained["p99"] / max(baseline["p99"], 1e-9)
+    s_ratio_churn = (churn["search"]["p99"]
+                     / max(baseline["search"]["p99"], 1e-9))
+    s_ratio_maintained = (maintained["search"]["p99"]
+                          / max(baseline["search"]["p99"], 1e-9))
+    result = {
+        "n0": n0, "d": d, "n_shards": n_shards,
+        "layout": "mutable" if mesh is None else "sharded_mutable",
+        "requests": requests, "q_batch": q_batch,
+        "write_batch": write_batch, "buffer_capacity": capacity,
+        "write_pause_s": write_pause,
+        "params": {"k1": params.k1, "k2": params.k2, "h": params.h,
+                   "k": params.k},
+        "policy": {"max_segments": policy.max_segments,
+                   "max_tombstone_ratio": policy.max_tombstone_ratio},
+        "phases": [baseline, churn, maintained],
+        "p99_ratio_churn_vs_baseline": float(ratio_churn),
+        "p99_ratio_maintained_vs_baseline": float(ratio_maintained),
+        "search_p99_ratio_churn_vs_baseline": float(s_ratio_churn),
+        "search_p99_ratio_maintained_vs_baseline": float(s_ratio_maintained),
+        "maintained_within_2x_of_baseline": bool(ratio_maintained <= 2.0),
+        "maintained_search_within_2x_of_baseline": bool(
+            s_ratio_maintained <= 2.0
+        ),
+        "cpu_caveat": (
+            "host==device on this harness: the shadow compact contends "
+            "with serving for the same cores while it runs (see module "
+            "docstring); on an accelerator the compact builds beside the "
+            "serving device"
+        ),
+    }
+    print(f"\np99 ratios vs baseline: request churn={ratio_churn:.2f}x "
+          f"maintained={ratio_maintained:.2f}x | search "
+          f"churn={s_ratio_churn:.2f}x maintained={s_ratio_maintained:.2f}x "
+          f"(target: maintained <= 2x)", flush=True)
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    print("\nwrote BENCH_serving.json", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

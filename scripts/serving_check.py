@@ -1,0 +1,156 @@
+"""Self-test for the serving engine on 8 simulated devices.
+
+Run via: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+             python scripts/serving_check.py
+(tests/test_engine.py spawns this as a subprocess so the main pytest
+process keeps its single-device view; the CI serving job runs it
+directly.)
+
+Checks, in order:
+  1. Engine-batched search over the sharded (static) layout is bit-equal
+     to a direct ``index.search`` over the concatenated batch.
+  2. Same bit-equality on the sharded-MUTABLE layout mid-churn (buffered
+     rows + sealed generations + tombstones in flight).
+  3. Forced background maintenance on the sharded-mutable layout: the
+     shadow compacts, concurrent writes replay with identical external
+     ids, the swap bumps the epoch, and post-swap engine search is
+     bit-equal to a direct search on the swapped index.
+  4. Pipelined multi-chunk search on the sharded layout is bit-equal to
+     the direct path (double-buffered staging changes timing only).
+  5. Engine-routed RetrievalStore: ``serving_engine()`` attachment serves
+     kNN-LM lookups, routes appends/deletes, and ``store.compact()``
+     becomes an off-path swap.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=8"
+).strip()
+
+import threading
+
+import jax
+import numpy as np
+
+from repro.core.types import ForestConfig, SearchParams
+from repro.data import ann_datasets
+from repro.index import (
+    IndexConfig,
+    ShardedHilbertIndex,
+    ShardedMutableHilbertIndex,
+)
+from repro.serve import MaintenancePolicy, RetrievalEngine, pipelined_search
+from repro.serve.retrieval import RetrievalStore, knn_lm_mix
+
+N, D, Q = 3000, 32, 48
+CFG = IndexConfig(
+    forest=ForestConfig(n_trees=4, bits=4, key_bits=128, leaf_size=16, seed=0),
+    query_chunk=16,
+    shards=4,
+)
+SP = SearchParams(k1=16, k2=64, h=1, k=10)
+
+
+def main() -> None:
+    assert jax.device_count() >= 8, jax.devices()
+    data, queries = ann_datasets.lowrank_dataset_with_queries(
+        N, Q, D, n_clusters=8, seed=0
+    )
+    data, queries = np.asarray(data), np.asarray(queries)
+
+    # 1. engine batching on the sharded static layout
+    static = ShardedHilbertIndex.build(data, CFG)
+    direct_i, direct_d = static.search(queries, SP)
+    eng = RetrievalEngine(static, SP, max_batch=16)
+    cuts = [0, 5, 8, 20, 21, 37, Q]
+    tickets = [eng.submit(queries[a:b]) for a, b in zip(cuts[:-1], cuts[1:])]
+    while eng.step():
+        pass
+    got_i = np.concatenate([t.ids for t in tickets])
+    got_d = np.concatenate([t.dists for t in tickets])
+    np.testing.assert_array_equal(got_i, np.asarray(direct_i))
+    np.testing.assert_array_equal(got_d, np.asarray(direct_d))
+    assert eng.metrics.counter("batches") < len(tickets)
+    print("[1] sharded static: engine batching bit-equal OK")
+
+    # 2. engine batching on the sharded-mutable layout mid-churn
+    mut = ShardedMutableHilbertIndex.build(
+        data[:2000], CFG, buffer_capacity=256, max_segments=8
+    )
+    ids0 = mut.insert(data[2000:2600])
+    mut.delete(np.asarray(ids0[:100]))
+    direct_i, direct_d = mut.search(queries, SP)
+    eng2 = RetrievalEngine(mut, SP)
+    ids, dists = eng2.search(queries)
+    np.testing.assert_array_equal(ids, np.asarray(direct_i))
+    np.testing.assert_array_equal(dists, np.asarray(direct_d))
+    print("[2] sharded mutable mid-churn: engine search bit-equal OK")
+
+    # 3. forced maintenance: shadow compact + write replay + epoch swap
+    old_index = eng2.index
+    stop = threading.Event()
+    inserted = []
+
+    def writer():
+        s = 2600
+        while not stop.is_set() and s < N:
+            inserted.append((s, eng2.insert(data[s : s + 50])))
+            s += 50
+
+    th = threading.Thread(target=writer)
+    th.start()
+    try:
+        assert eng2.maintain_once(force=True)
+    finally:
+        stop.set()
+        th.join()
+    assert eng2.epoch == 1 and eng2.index is not old_index
+    n_written = sum(i.shape[0] for _, i in inserted)
+    stats = eng2.maintenance_stats()
+    assert stats["n_live"] == 2500 + n_written, stats
+    for s, rid in inserted:
+        np.testing.assert_array_equal(
+            np.asarray(rid), np.arange(s, s + rid.shape[0])
+        )
+    ni, nd = eng2.index.search(queries, SP)
+    ei, ed = eng2.search(queries)
+    np.testing.assert_array_equal(ei, np.asarray(ni))
+    np.testing.assert_array_equal(ed, np.asarray(nd))
+    print(f"[3] sharded maintenance swap OK ({n_written} rows replayed)")
+
+    # 4. pipelined multi-chunk search, sharded layout
+    pi, pd = pipelined_search(static, queries, SP, query_chunk=16)
+    di, dd = static.search(queries, SP)
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(pd), np.asarray(dd))
+    print("[4] sharded pipelined search bit-equal OK")
+
+    # 5. engine-routed RetrievalStore serving kNN-LM
+    vals = np.arange(N, dtype=np.int32) % 97
+    store = RetrievalStore.build(data, vals, CFG, shards=4)
+    logits = np.asarray(
+        np.random.default_rng(0).normal(size=(8, 97)), np.float32
+    )
+    baseline = np.asarray(
+        knn_lm_mix(logits, queries[:8], store, SP, lam=0.3)
+    )
+    engine = store.serving_engine(
+        SP, maintenance=MaintenancePolicy(), start=True
+    )
+    routed = np.asarray(knn_lm_mix(logits, queries[:8], store, SP, lam=0.3))
+    np.testing.assert_array_equal(routed, baseline)
+    new_ids = store.append(data[:16], vals[:16])
+    assert store.delete(np.asarray(new_ids)) == 16
+    store.compact()  # forced off-path swap through the engine
+    assert engine.metrics.counter("swaps") == 1
+    after = np.asarray(knn_lm_mix(logits, queries[:8], store, SP, lam=0.3))
+    engine.stop(drain=True)
+    assert after.shape == baseline.shape
+    print("[5] engine-routed RetrievalStore + compact-as-swap OK")
+
+    print("ALL SERVING CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -206,6 +206,21 @@ class LsmIdSpace:
             raise ValueError("this index tracks no values (insert them)")
         return jnp.asarray(self.values)
 
+    def clone(self) -> "LsmIdSpace":
+        """Deep copy of the host bookkeeping (the snapshot/swap hook).
+
+        The arrays are small relative to sealed segments (1 byte/id + the
+        values payload), so cloning is cheap enough to run under a serving
+        engine's write lock.
+        """
+        c = LsmIdSpace()
+        c.next_id = self.next_id
+        c.alive = self.alive.copy()
+        c.values = None if self.values is None else self.values.copy()
+        c.track_values = self.track_values
+        c.delete_epoch = self.delete_epoch
+        return c
+
 
 @dataclasses.dataclass(eq=False)  # identity equality: segments hold arrays
 class Segment:
@@ -563,6 +578,58 @@ class MutableHilbertIndex:
         if self.segments:
             self._merge_segments(list(self.segments))
         return self
+
+    # -- serving-engine hooks ------------------------------------------------
+
+    def snapshot(self) -> "MutableHilbertIndex":
+        """Cheap shared-buffer copy for off-path maintenance (double-buffer).
+
+        Sealed segments are immutable, so the snapshot SHARES their arrays
+        (zero copy — the dominant state) under fresh :class:`Segment`
+        wrappers (per-segment dead-count caches must not race between the
+        serving copy and the shadow); only the write buffer and the LSM
+        bookkeeping (alive mask, values, id cursor) are deep-copied.  The
+        snapshot is a fully independent index: a serving engine hands it to
+        a maintenance thread, compacts it off the query path, replays the
+        writes that arrived meanwhile, and swaps it in (see
+        :mod:`repro.serve.engine`).
+        """
+        snap = MutableHilbertIndex(
+            config=self.config,
+            buffer_capacity=self.buffer_capacity,
+            max_segments=self.max_segments,
+        )
+        snap._dim = self._dim
+        if self._dim is not None:
+            snap._buf_points = self._buf_points.copy()
+            snap._buf_ids = self._buf_ids.copy()
+        snap._buf_count = self._buf_count
+        snap._lsm = self._lsm.clone()
+        snap._gen = self._gen
+        snap.segments = [
+            Segment(index=seg.index, ids=seg.ids, gen=seg.gen)
+            for seg in self.segments
+        ]
+        return snap
+
+    def maintenance_stats(self) -> Dict[str, Any]:
+        """The trigger signals a background maintainer watches (host-only).
+
+        ``tombstone_ratio`` is dead/allocated ids; ``mergeable_segments``
+        counts segments that actually hold raw points (the only ones a
+        merge or compaction can re-sort).
+        """
+        next_id = max(self._next_id, 1)
+        return {
+            "n_segments": self.n_segments,
+            "mergeable_segments": sum(
+                1 for s in self.segments if s.index.points is not None
+            ),
+            "n_live": self.n_live,
+            "n_deleted": self.n_deleted,
+            "n_buffered": self.n_buffered,
+            "tombstone_ratio": float(self.n_deleted) / float(next_id),
+        }
 
     # -- search --------------------------------------------------------------
 

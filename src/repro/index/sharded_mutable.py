@@ -699,6 +699,62 @@ class ShardedMutableHilbertIndex:
         self._adopt_base(base, ids)
         return self
 
+    # -- serving-engine hooks ------------------------------------------------
+
+    def snapshot(self) -> "ShardedMutableHilbertIndex":
+        """Cheap shared-buffer copy for off-path maintenance (double-buffer).
+
+        Mirrors :meth:`MutableHilbertIndex.snapshot`: sealed generations
+        are immutable, so their stacked device arrays are SHARED (zero
+        copy) under fresh :class:`ShardedSegment` wrappers (dead-count
+        caches must not race between serving copy and shadow); the
+        per-shard write buffers, routing bounds, and LSM bookkeeping are
+        deep-copied.  The compiled-dispatch cache starts empty on the
+        snapshot — the executables are keyed by LSM shape and re-resolve on
+        first search after a swap.
+        """
+        snap = ShardedMutableHilbertIndex(
+            config=self.config, mesh=self.mesh,
+            buffer_capacity=self.buffer_capacity,
+            max_segments=self.max_segments,
+        )
+        snap._dim = self._dim
+        if self._buf_pts is not None:
+            snap._buf_pts = self._buf_pts.copy()
+            snap._buf_ids = self._buf_ids.copy()
+            snap._buf_count = self._buf_count.copy()
+        snap._lsm = self._lsm.clone()
+        snap._gen = self._gen
+        snap._perms, snap._flips = self._perms, self._flips
+        snap._rr = self._rr
+        if self._bounds is not None:
+            snap._bounds = self._bounds.copy()
+            snap._route_lo = np.asarray(self._route_lo).copy()
+            snap._route_hi = np.asarray(self._route_hi).copy()
+        snap.segments = [
+            ShardedSegment(
+                stack=seg.stack, points=seg.points, quant=seg.quant,
+                gen=seg.gen, n_valid=seg.n_valid.copy(),
+                pad_max=seg.pad_max, ids_host=seg.ids_host,
+            )
+            for seg in self.segments
+        ]
+        return snap
+
+    def maintenance_stats(self) -> Dict[str, object]:
+        """The trigger signals a background maintainer watches (host-only)."""
+        next_id = max(self._lsm.next_id, 1)
+        return {
+            "n_segments": self.n_segments,
+            "mergeable_segments": sum(
+                1 for g in self.segments if g.points is not None
+            ),
+            "n_live": self.n_live,
+            "n_deleted": self.n_deleted,
+            "n_buffered": self.n_buffered,
+            "tombstone_ratio": float(self.n_deleted) / float(next_id),
+        }
+
     def _gather_live(self) -> Tuple[np.ndarray, np.ndarray]:
         """All live (ids, points), host-side, sorted by external id."""
         parts_i, parts_p = [], []

@@ -29,6 +29,7 @@ from repro import configs
 from repro.core.types import ForestConfig, SearchParams
 from repro.index import IndexConfig
 from repro.models import model
+from repro.serve.engine import MaintenancePolicy
 from repro.serve.retrieval import RetrievalStore, knn_lm_mix
 from repro.sharding import ShardingRules
 
@@ -47,6 +48,12 @@ def main() -> None:
     ap.add_argument("--churn", action="store_true",
                     help="append/delete datastore entries while decoding "
                          "(streaming writes on either layout)")
+    ap.add_argument("--engine", action="store_true",
+                    help="serve the datastore through the RetrievalEngine: "
+                         "lookups go through the admission queue and "
+                         "micro-batcher, and LSM maintenance (tier merges, "
+                         "compaction) runs on a background thread with an "
+                         "atomic index swap instead of stalling decode")
     ap.add_argument("--lam", type=float, default=0.25)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -100,6 +107,15 @@ def main() -> None:
         layout = (f"sharded-mutable x{args.shards}" if store.is_sharded
                   else "mutable (single device)")
         print(f"[retrieval] datastore: {keys.shape[0]} entries, {layout}")
+        if args.engine:
+            # Background maintenance only makes sense when segments keep
+            # their raw points (store_points tracks --churn above).
+            engine = store.serving_engine(
+                SearchParams(k1=32, k2=64, h=1, k=8),
+                maintenance=MaintenancePolicy() if store_points else None,
+                start=True,
+            )
+            print(f"[engine] {engine!r}")
 
     t0 = time.time()
     logits, caches = model.prefill(cfg, params, prompts, rules, **extra)
@@ -133,6 +149,15 @@ def main() -> None:
             tok = jnp.argmax(logits_t, axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(tok)
     dt = time.time() - t0
+    if store is not None and store.engine is not None:
+        store.engine.stop(drain=True)
+        snap = store.engine.metrics.snapshot()
+        lat = snap["latency_ms"]
+        print(f"[engine] {snap['counters']['batches']} batches / "
+              f"{snap['counters']['rows_searched']} rows, "
+              f"p50={lat.get('p50', 0):.1f}ms p99={lat.get('p99', 0):.1f}ms, "
+              f"swaps={snap['counters']['swaps']} "
+              f"(maintenance runs={snap['counters']['maintenance_runs']})")
     if store is not None and args.churn:
         rep = store.memory_report()
         print(f"[churn] live={rep['n_live']} deleted={rep['n_deleted']} "

@@ -24,6 +24,29 @@ Params = Dict[str, Any]
 ENC_SPEC = LayerSpec(mixer=ATTN, ffn=DENSE)
 
 
+@jax.custom_vjp
+def _pinned(tree):
+    """``optimization_barrier`` with an identity VJP.
+
+    The barrier has no differentiation rule, and its purpose here is purely
+    a scheduling pin — mathematically it IS the identity — so the custom
+    rule passes cotangents straight through (the surrounding casts' own
+    transposes restore f32 where needed).
+    """
+    return jax.lax.optimization_barrier(tree)
+
+
+def _pinned_fwd(tree):
+    return _pinned(tree), None
+
+
+def _pinned_bwd(_, ct):
+    return (ct,)
+
+
+_pinned.defvjp(_pinned_fwd, _pinned_bwd)
+
+
 def _bf16_params(cfg: ModelConfig, params: Params) -> Params:
     """Pre-cast big (>1M elem) f32 weights to bf16 once per step.
 
@@ -43,7 +66,7 @@ def _bf16_params(cfg: ModelConfig, params: Params) -> Params:
     # The barrier pins the converts: without it GSPMD hoists the FSDP
     # all-gather BEFORE the convert and moves f32 weights over the wire
     # (nemotron: 4.2 TB/device of f32[18432,18432] gathers).
-    return jax.lax.optimization_barrier(jax.tree.map(cast, params))
+    return _pinned(jax.tree.map(cast, params))
 
 
 # ---------------------------------------------------------------------------

@@ -1,1 +1,14 @@
+from repro.serve.engine import (  # noqa: F401
+    EngineClosed,
+    MaintenancePolicy,
+    QueueFull,
+    RetrievalEngine,
+    SearchTicket,
+)
+from repro.serve.metrics import (  # noqa: F401
+    EngineMetrics,
+    LatencyRecorder,
+    percentiles,
+)
+from repro.serve.pipeline import pipelined_search  # noqa: F401
 from repro.serve.retrieval import RetrievalStore, knn_lm_mix  # noqa: F401

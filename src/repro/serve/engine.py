@@ -1,0 +1,665 @@
+"""Async retrieval serving engine: admission, micro-batching, background
+maintenance with double-buffered index swap.
+
+The index family is fast per call, but a production deployment is a
+*request stream*, not an array: callers arrive raggedly, LSM maintenance
+(tier merges, the multi-second full ``compact()``) must never run on the
+query path, and the compiled-dispatch cache must be hit by construction.
+``RetrievalEngine`` is that serving loop, layered over ANY index layout
+(plain / mutable / sharded / sharded-mutable — anything with
+``search(queries, params, backend=, query_chunk=)``):
+
+* **Admission + micro-batching** — :meth:`submit` places a request in a
+  BOUNDED queue (backpressure: ``block=False`` raises :class:`QueueFull`
+  when the deployment is saturated, instead of unbounded memory growth).
+  The serve loop drains the queue into micro-batches of up to
+  ``max_batch`` rows sharing one :class:`SearchParams`, concatenates them
+  into one search, and splits results back per request.  Batches cap at
+  the facade's ``query_chunk``, whose pow2 bucket padding then guarantees
+  at most ``log2(query_chunk)+1`` compiled shapes — the dispatch cache is
+  hit by construction, never by luck.
+* **Pipelined retrieval** — multi-chunk batches run through
+  :func:`repro.serve.pipeline.pipelined_search`: host staging of chunk
+  *i+1* overlaps device execution of chunk *i* (double-buffered
+  ``device_put``), bit-identical to a direct ``index.search``.
+* **Background maintenance + atomic swap** — a maintainer thread watches
+  :meth:`maintenance_stats` (generation count, tombstone ratio).  When a
+  threshold trips it snapshots the serving index (cheap: sealed segments
+  are shared, only buffers/bookkeeping copy), runs the expensive
+  ``compact()`` on that SHADOW off the query path, replays the writes that
+  arrived meanwhile (id assignment is sequential and deterministic, so
+  replayed inserts receive identical external ids), and atomically swaps
+  the serving pointer.  An epoch/refcount guard lets in-flight batches
+  finish on the OLD index — their results stay bit-equal to a direct
+  search on the index version that admitted them — and the swap waits for
+  the old epoch's refcount to drain before retiring it.
+
+Determinism for tests: construct with ``start=False`` and drive
+:meth:`step` / :meth:`maintain_once` by hand — no threads, same code path
+(the serve loop calls exactly these).  See ``docs/SERVING.md``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.types import SearchParams
+from repro.serve.metrics import EngineMetrics
+from repro.serve.pipeline import pipelined_search
+
+__all__ = [
+    "EngineClosed",
+    "MaintenancePolicy",
+    "QueueFull",
+    "RetrievalEngine",
+    "SearchTicket",
+]
+
+
+class QueueFull(RuntimeError):
+    """Admission queue at capacity: the deployment is saturated (shed load)."""
+
+
+class EngineClosed(RuntimeError):
+    """The engine stopped admitting requests (shutdown in progress/done)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenancePolicy:
+    """When the background maintainer acts, and how often it looks.
+
+    A full ``compact()`` triggers when EITHER threshold trips:
+    ``max_segments`` bounds the per-query fan-out cost (every sealed
+    generation is an extra search stage — the ~8× p50 creep in
+    ``BENCH_sharded_churn.json``), ``max_tombstone_ratio`` bounds wasted
+    candidate-pool slots (each segment's k is inflated by its dead count).
+    """
+
+    max_segments: int = 4          # sealed segments/generations before compact
+    max_tombstone_ratio: float = 0.25  # dead/allocated ids before compact
+    poll_interval_s: float = 0.05  # maintainer wake period
+
+    def triggered(self, stats: Dict[str, Any]) -> bool:
+        if stats.get("n_live", 0) == 0:
+            return False
+        if stats.get("mergeable_segments", 0) < 1:
+            return False  # store_points=False: nothing can be re-sorted
+        return (
+            int(stats.get("n_segments", 0)) > self.max_segments
+            or float(stats.get("tombstone_ratio", 0.0))
+            > self.max_tombstone_ratio
+        )
+
+
+class SearchTicket:
+    """A submitted request's handle: blocks on :meth:`result`.
+
+    ``epoch`` records which index version served the batch (filled at
+    completion) — the engine's bit-equality contract is against a direct
+    ``search`` on THAT version.
+    """
+
+    def __init__(self, queries: np.ndarray, params: SearchParams):
+        self.queries = queries
+        self.params = params
+        self.submitted_at = time.perf_counter()
+        self.completed_at: Optional[float] = None
+        self.epoch: Optional[int] = None
+        self.ids: Optional[np.ndarray] = None
+        self.dists: Optional[np.ndarray] = None
+        self.error: Optional[BaseException] = None
+        self._done = threading.Event()
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def latency_ms(self) -> Optional[float]:
+        if self.completed_at is None:
+            return None
+        return 1000.0 * (self.completed_at - self.submitted_at)
+
+    def result(
+        self, timeout: Optional[float] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(ids (m, k), sq-dists (m, k)) — blocks until served.
+
+        Raises ``TimeoutError`` if not served in ``timeout`` seconds, or
+        re-raises the serve-side exception (e.g. :class:`EngineClosed` for
+        requests failed by a non-draining shutdown).
+        """
+        if not self._done.wait(timeout):
+            raise TimeoutError("search request not served in time")
+        if self.error is not None:
+            raise self.error
+        return self.ids, self.dists
+
+    def _complete(self, ids, dists, epoch) -> None:
+        self.ids, self.dists, self.epoch = ids, dists, epoch
+        self.completed_at = time.perf_counter()
+        self._done.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self.error = err
+        self.completed_at = time.perf_counter()
+        self._done.set()
+
+
+class _Epoch:
+    """One serving-index version with a refcount of in-flight batches."""
+
+    def __init__(self, index, epoch: int):
+        self.index = index
+        self.epoch = epoch
+        self.refs = 0
+        self._cv = threading.Condition()
+
+    def checkout(self) -> None:
+        with self._cv:
+            self.refs += 1
+
+    def checkin(self) -> None:
+        with self._cv:
+            self.refs -= 1
+            self._cv.notify_all()
+
+    def wait_drained(self, timeout: Optional[float] = None) -> bool:
+        with self._cv:
+            return self._cv.wait_for(lambda: self.refs == 0, timeout)
+
+
+class RetrievalEngine:
+    """The async serving loop over one index (any layout).
+
+    Args:
+      index: the serving index.  Mutable layouts
+        (:class:`~repro.index.MutableHilbertIndex`,
+        :class:`~repro.index.ShardedMutableHilbertIndex`) additionally get
+        :meth:`insert`/:meth:`delete` routing and background maintenance;
+        static layouts serve read-only.
+      params: default :class:`SearchParams` for requests that don't carry
+        their own.
+      max_queue: admission-queue capacity in REQUESTS (backpressure bound).
+      max_batch: micro-batch cap in query ROWS (default: the index
+        config's ``query_chunk`` — one fused dispatch per batch).
+      backend: kernel routing passed through to every search.
+      pipeline: double-buffer chunk staging for multi-chunk batches
+        (:func:`~repro.serve.pipeline.pipelined_search`).
+      maintenance: background-maintenance thresholds; ``None`` disables
+        the maintainer thread (maintenance can still be driven manually
+        via :meth:`maintain_once`).
+      start: spawn the serve (+ maintainer) threads immediately.  With
+        ``start=False`` the engine is in deterministic step mode: drive
+        :meth:`step` and :meth:`maintain_once` by hand.
+
+    All index access is serialized on one internal lock — LSM facades are
+    not thread-safe, so searches, writes, replay, and swap take turns; the
+    expensive shadow ``compact()`` is the one maintenance phase that runs
+    OUTSIDE the lock (that is the whole point).  Used as a context
+    manager, ``__exit__`` performs a draining :meth:`stop`.
+    """
+
+    def __init__(
+        self,
+        index,
+        params: Optional[SearchParams] = None,
+        *,
+        max_queue: int = 256,
+        max_batch: Optional[int] = None,
+        backend: str = "auto",
+        pipeline: bool = True,
+        maintenance: Optional[MaintenancePolicy] = MaintenancePolicy(),
+        start: bool = False,
+    ):
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.params = params or SearchParams()
+        self.backend = backend
+        self.pipeline = pipeline
+        self.max_queue = int(max_queue)
+        chunk = getattr(getattr(index, "config", None), "query_chunk", 1024)
+        self.max_batch = int(max_batch or chunk)
+        self.query_chunk = min(chunk, self.max_batch)
+        self.maintenance = maintenance
+        self.metrics = EngineMetrics()
+
+        self._state_lock = threading.Lock()   # epoch pointer + write log
+        self._serve_lock = threading.RLock()  # every index operation
+        self._warm_queries: Dict[SearchParams, np.ndarray] = {}
+        self._current = _Epoch(index, 0)
+        self._write_log: Optional[List[Tuple[str, Any, Any]]] = None
+
+        self._cv = threading.Condition()
+        self._pending: Deque[SearchTicket] = deque()
+        self._closed = False
+        self._worker: Optional[threading.Thread] = None
+        self._maintainer: Optional[threading.Thread] = None
+        self._stop_event = threading.Event()
+        self.last_maintenance_error: Optional[BaseException] = None
+        if start:
+            self.start()
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def index(self):
+        """The CURRENT serving index (the pointer a swap replaces)."""
+        with self._state_lock:
+            return self._current.index
+
+    @property
+    def epoch(self) -> int:
+        """Bumps by one on every background swap."""
+        with self._state_lock:
+            return self._current.epoch
+
+    @property
+    def queue_depth(self) -> int:
+        with self._cv:
+            return len(self._pending)
+
+    @property
+    def running(self) -> bool:
+        return self._worker is not None and self._worker.is_alive()
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(
+        self,
+        queries,
+        params: Optional[SearchParams] = None,
+        *,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> SearchTicket:
+        """Admit one request ((m, d) queries) into the bounded queue.
+
+        Returns a :class:`SearchTicket`; ``block=False`` raises
+        :class:`QueueFull` instead of waiting for space, and a closed
+        engine raises :class:`EngineClosed` (both count as rejections in
+        the metrics).
+        """
+        q = np.asarray(jax.device_get(queries), np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        ticket = SearchTicket(q, params or self.params)
+        with self._cv:
+            while True:
+                if self._closed:
+                    self.metrics.bump("rejected")
+                    raise EngineClosed("engine is shut down")
+                if len(self._pending) < self.max_queue:
+                    break
+                if not block:
+                    self.metrics.bump("rejected")
+                    raise QueueFull(
+                        f"admission queue at capacity ({self.max_queue})"
+                    )
+                if not self._cv.wait(timeout):
+                    self.metrics.bump("rejected")
+                    raise QueueFull(
+                        f"admission queue still full after {timeout}s"
+                    )
+            self._pending.append(ticket)
+            self.metrics.bump("admitted")
+            self._cv.notify_all()
+        return ticket
+
+    def search(
+        self,
+        queries,
+        params: Optional[SearchParams] = None,
+        *,
+        timeout: Optional[float] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Synchronous convenience: submit and wait for the result.
+
+        In step mode (no serve thread) the calling thread pumps
+        :meth:`step` itself, so results are produced deterministically with
+        zero background threads — the mode the bit-equality tests drive.
+        """
+        ticket = self.submit(queries, params, timeout=timeout)
+        if not self.running:
+            while not ticket.done:
+                if self.step() == 0 and not ticket.done:
+                    raise RuntimeError(
+                        "step() made no progress on a pending ticket"
+                    )
+            return ticket.result(0)
+        return ticket.result(timeout)
+
+    # -- writes (routed so the maintainer can log + replay them) -------------
+
+    def insert(self, points, values=None) -> np.ndarray:
+        """Stream rows into the serving index; returns stable external ids.
+
+        While a shadow compaction is in flight the write is ALSO appended
+        to the replay log: id assignment is sequential, so replaying the
+        log on the shadow reproduces identical external ids.
+        """
+        with self._serve_lock:
+            index = self.index
+            if not hasattr(index, "insert"):
+                raise TypeError(
+                    f"{type(index).__name__} is immutable — the engine "
+                    "serves it read-only"
+                )
+            pts = np.asarray(jax.device_get(points), np.float32)
+            vals = (
+                None if values is None
+                else np.asarray(jax.device_get(values)).copy()
+            )
+            ids = index.insert(pts, vals)
+            with self._state_lock:
+                if self._write_log is not None:
+                    self._write_log.append(("insert", pts.copy(), vals))
+            self.metrics.bump("inserts", int(np.atleast_1d(ids).shape[0]))
+            return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone external ids on the serving index (logged like insert)."""
+        with self._serve_lock:
+            index = self.index
+            if not hasattr(index, "delete"):
+                raise TypeError(
+                    f"{type(index).__name__} is immutable — the engine "
+                    "serves it read-only"
+                )
+            idn = np.asarray(jax.device_get(ids)).copy()
+            n = index.delete(idn)
+            with self._state_lock:
+                if self._write_log is not None:
+                    self._write_log.append(("delete", idn, None))
+            self.metrics.bump("deletes", int(n))
+            return n
+
+    def values_at(self, ids, fill=0):
+        """Per-point payload gather on the serving index (kNN-LM tokens)."""
+        with self._serve_lock:
+            return self.index.values_at(ids, fill=fill)
+
+    # -- the serve loop ------------------------------------------------------
+
+    def _take_batch_locked(self) -> List[SearchTicket]:
+        """Pop a params-homogeneous run of requests up to ``max_batch`` rows.
+
+        Caller holds ``self._cv``.  Requests keep arrival order; a request
+        with different params ends the batch (it leads the next one), so
+        heterogeneous params cost extra batches, never wrong results.
+        """
+        batch: List[SearchTicket] = []
+        rows = 0
+        while self._pending:
+            nxt = self._pending[0]
+            if batch and (
+                nxt.params != batch[0].params
+                or rows + nxt.queries.shape[0] > self.max_batch
+            ):
+                break
+            batch.append(self._pending.popleft())
+            rows += nxt.queries.shape[0]
+        if batch:
+            self._cv.notify_all()  # wake submitters blocked on a full queue
+        return batch
+
+    def _execute(self, batch: List[SearchTicket]) -> None:
+        with self._state_lock:
+            ref = self._current
+            ref.checkout()
+        try:
+            q = np.concatenate([t.queries for t in batch])
+            params = batch[0].params
+            wq = self._warm_queries.get(params)
+            if wq is None or wq.shape[0] != min(
+                q.shape[0], self.query_chunk
+            ):
+                # retained so maintenance can pre-warm the shadow's
+                # compiled dispatches with a representative batch shape
+                self._warm_queries[params] = q[: self.query_chunk].copy()
+            with self._serve_lock:
+                # timed inside the lock: batch_latency is the search
+                # execution itself; queue + lock wait shows up in the
+                # per-ticket latency instead
+                t0 = time.perf_counter()
+                if self.pipeline:
+                    ids, dists = pipelined_search(
+                        ref.index, q, params, backend=self.backend,
+                        query_chunk=self.query_chunk,
+                    )
+                else:
+                    ids, dists = ref.index.search(
+                        q, params, backend=self.backend,
+                        query_chunk=self.query_chunk,
+                    )
+                ids = np.asarray(jax.device_get(ids))
+                dists = np.asarray(jax.device_get(dists))
+            self.metrics.batch_latency.record(
+                1000.0 * (time.perf_counter() - t0)
+            )
+            self.metrics.bump("batches")
+            self.metrics.bump("rows_searched", int(q.shape[0]))
+            off = 0
+            for t in batch:
+                m = t.queries.shape[0]
+                t._complete(ids[off : off + m], dists[off : off + m],
+                            ref.epoch)
+                off += m
+        except BaseException as e:  # fail the whole batch, keep serving
+            for t in batch:
+                t._fail(e)
+        finally:
+            ref.checkin()
+        for t in batch:
+            if t.latency_ms is not None:
+                self.metrics.latency.record(t.latency_ms)
+            self.metrics.bump("completed")
+
+    def step(self) -> int:
+        """Serve ONE micro-batch synchronously; returns requests served.
+
+        The deterministic single-thread mode: exactly what the serve
+        thread runs, minus the waiting.  Returns 0 when the queue is
+        empty.
+        """
+        with self._cv:
+            batch = self._take_batch_locked()
+        if not batch:
+            return 0
+        self._execute(batch)
+        return len(batch)
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait(0.05)
+                if not self._pending and self._closed:
+                    return  # drained + closed: clean exit
+                batch = self._take_batch_locked()
+            if batch:
+                self._execute(batch)
+
+    # -- background maintenance + double-buffered swap -----------------------
+
+    def maintenance_stats(self) -> Dict[str, Any]:
+        """The serving index's trigger signals (empty for static layouts)."""
+        with self._serve_lock:
+            index = self.index
+            if not hasattr(index, "maintenance_stats"):
+                return {}
+            return index.maintenance_stats()
+
+    def maintain_once(self, force: bool = False) -> bool:
+        """One full maintenance cycle; returns True iff an index swap
+        happened.
+
+        Protocol (the serve lock is held ONLY for the cheap steps):
+
+        1. snapshot the serving index + open the write replay log  (lock)
+        2. ``compact()`` the shadow — the expensive part            (NO lock)
+        3. catch-up rounds: drain the log so far onto the shadow,
+           then pre-warm the shadow's compiled dispatches with the
+           batch shapes the serve loop has actually seen            (NO lock)
+        4. drain the final log tail, swap the pointer               (lock)
+        5. wait for the old epoch's in-flight refcount to drain
+
+        Step 3 is what keeps the dispatch-cache promise across swaps: a
+        compacted index has a different LSM shape (and replayed writes a
+        different buffer occupancy), so without it the FIRST post-swap
+        query would pay the retrace/compile on the query path — the
+        exact stall the shadow copy exists to avoid.  Warming runs after
+        each off-lock catch-up round, so by the final locked drain the
+        remaining log tail is small and its shapes almost surely
+        compiled.
+
+        ``force=True`` skips the threshold check (benchmarks use it).
+        Static layouts and layouts whose segments lack stored points
+        return False without touching anything.
+        """
+        with self._serve_lock:
+            index = self.index
+            if not (hasattr(index, "snapshot") and hasattr(index, "compact")):
+                return False
+            stats = index.maintenance_stats()
+            policy = self.maintenance or MaintenancePolicy()
+            if not force and not policy.triggered(stats):
+                return False
+            if force and stats.get("mergeable_segments", 0) < 1:
+                return False  # nothing compactable (store_points=False)
+            shadow = index.snapshot()
+            with self._state_lock:
+                self._write_log = []
+        self.metrics.bump("maintenance_runs")
+        try:
+            shadow.compact()  # off the query path: serving continues
+        except BaseException:
+            with self._state_lock:
+                self._write_log = None
+            raise
+        def apply(log):
+            for op, a, b in log:
+                if op == "insert":
+                    shadow.insert(a, b)
+                else:
+                    shadow.delete(a)
+
+        def warm():
+            # compile the post-swap shapes off-path (results discarded);
+            # a failure here would fail identically after the swap, so
+            # let it propagate and abandon the shadow instead
+            try:
+                for p, wq in list(self._warm_queries.items()):
+                    shadow.search(wq, p, backend=self.backend,
+                                  query_chunk=self.query_chunk)
+            except BaseException:
+                with self._state_lock:
+                    self._write_log = None
+                raise
+
+        # catch-up rounds: bounded, so a writer outpacing replay can't
+        # starve the swap — the final tail drains under the serve lock
+        for _ in range(4):
+            with self._state_lock:
+                log, self._write_log = self._write_log, []
+            apply(log)
+            warm()
+            if not log:
+                break
+        with self._serve_lock:
+            with self._state_lock:
+                log = self._write_log or []
+                self._write_log = None
+            apply(log)
+            with self._state_lock:
+                old = self._current
+                self._current = _Epoch(shadow, old.epoch + 1)
+            self.metrics.bump("swaps")
+        old.wait_drained()  # in-flight batches finish on the old index
+        return True
+
+    def _maintenance_loop(self) -> None:
+        policy = self.maintenance or MaintenancePolicy()
+        while not self._stop_event.wait(policy.poll_interval_s):
+            try:
+                self.maintain_once()
+            except BaseException as e:
+                # maintenance must never take serving down; surface the
+                # error for operators/tests and keep the loop alive.
+                self.last_maintenance_error = e
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "RetrievalEngine":
+        """Spawn the serve thread (+ maintainer when a policy is set)."""
+        if self.running:
+            return self
+        self._closed = False
+        self._stop_event.clear()
+        self._worker = threading.Thread(
+            target=self._serve_loop, name="retrieval-serve", daemon=True
+        )
+        self._worker.start()
+        if self.maintenance is not None and hasattr(self.index, "snapshot"):
+            self._maintainer = threading.Thread(
+                target=self._maintenance_loop, name="retrieval-maintenance",
+                daemon=True,
+            )
+            self._maintainer.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: float = 60.0) -> None:
+        """Shut down: close admission, then drain or fail pending requests.
+
+        ``drain=True`` (default) serves everything already admitted before
+        the serve thread exits; ``drain=False`` fails pending tickets with
+        :class:`EngineClosed`.  Always joins both threads.  Idempotent.
+        """
+        with self._cv:
+            self._closed = True
+            if not drain:
+                while self._pending:
+                    self._pending.popleft()._fail(
+                        EngineClosed("engine stopped without draining")
+                    )
+            self._cv.notify_all()
+        self._stop_event.set()
+        if self._maintainer is not None:
+            self._maintainer.join(timeout)
+            self._maintainer = None
+        if self._worker is not None:
+            self._worker.join(timeout)
+            if self._worker.is_alive():
+                raise TimeoutError("serve thread did not drain in time")
+            self._worker = None
+        # step-mode engines (never started) drain synchronously
+        if drain:
+            while self.step():
+                pass
+        else:
+            with self._cv:
+                while self._pending:
+                    self._pending.popleft()._fail(
+                        EngineClosed("engine stopped without draining")
+                    )
+
+    def __enter__(self) -> "RetrievalEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=exc[0] is None)
+
+    def __repr__(self) -> str:
+        return (
+            f"RetrievalEngine(index={type(self.index).__name__}, "
+            f"epoch={self.epoch}, queue={self.queue_depth}/{self.max_queue}, "
+            f"max_batch={self.max_batch}, running={self.running}, "
+            f"maintenance={'on' if self.maintenance else 'off'})"
+        )

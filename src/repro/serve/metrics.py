@@ -1,0 +1,117 @@
+"""Serving metrics: latency percentiles, counters, and queue gauges.
+
+The engine's observability surface.  Everything is host-side and lock-free
+for readers (snapshots copy under the recorder's lock), cheap enough to
+record per request on the serving path: a latency sample is one float
+append, a counter bump one integer add.
+
+``LatencyRecorder`` keeps raw samples (bounded ring) so percentiles are
+exact over the retained window rather than histogram-bucketed — tail
+latency (p999) is the whole point of the serving engine, so the last thing
+the metrics layer should do is quantize it away.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["LatencyRecorder", "EngineMetrics", "percentiles"]
+
+
+def percentiles(samples_ms, points=(50.0, 99.0, 99.9)) -> Dict[str, float]:
+    """``{"p50": ..., "p99": ..., "p999": ...}`` over a sample list (ms).
+
+    Uses the nearest-rank method on the sorted samples (what a latency SLO
+    means operationally); returns an empty dict for no samples.
+    """
+    s = np.sort(np.asarray(list(samples_ms), np.float64))
+    if s.size == 0:
+        return {}
+    out = {}
+    for p in points:
+        label = f"p{p:g}".replace(".", "")
+        idx = min(s.size - 1, int(np.ceil(p / 100.0 * s.size)) - 1)
+        out[label] = float(s[max(idx, 0)])
+    return out
+
+
+class LatencyRecorder:
+    """Bounded ring of latency samples with exact percentile snapshots."""
+
+    def __init__(self, capacity: int = 65536):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self._cap = int(capacity)
+        self._buf = np.zeros((self._cap,), np.float64)
+        self._n = 0          # total ever recorded
+        self._lock = threading.Lock()
+
+    def record(self, latency_ms: float) -> None:
+        with self._lock:
+            self._buf[self._n % self._cap] = float(latency_ms)
+            self._n += 1
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    def samples(self) -> np.ndarray:
+        """Copy of the retained window (oldest-sample order not preserved)."""
+        with self._lock:
+            return self._buf[: min(self._n, self._cap)].copy()
+
+    def snapshot(self, points=(50.0, 99.0, 99.9)) -> Dict[str, float]:
+        s = self.samples()
+        out = percentiles(s, points)
+        out["count"] = float(self._n)
+        if s.size:
+            out["mean"] = float(s.mean())
+            out["max"] = float(s.max())
+        return out
+
+
+class EngineMetrics:
+    """Counters + gauges + latency recorders for one serving engine.
+
+    * ``latency`` — submit→result wall time per request (queue wait
+      included: what a caller experiences).
+    * ``batch_latency`` — device-side wall time per executed micro-batch.
+    * counters — requests admitted/rejected/completed, batches executed,
+      rows searched, index swaps, maintenance runs, write ops.
+    """
+
+    def __init__(self, capacity: int = 65536):
+        self.latency = LatencyRecorder(capacity)
+        self.batch_latency = LatencyRecorder(capacity)
+        self._lock = threading.Lock()
+        self._counters: Dict[str, int] = {
+            "admitted": 0,
+            "rejected": 0,
+            "completed": 0,
+            "batches": 0,
+            "rows_searched": 0,
+            "inserts": 0,
+            "deletes": 0,
+            "swaps": 0,
+            "maintenance_runs": 0,
+        }
+
+    def bump(self, name: str, by: int = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + int(by)
+
+    def counter(self, name: str) -> int:
+        with self._lock:
+            return self._counters.get(name, 0)
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            counters = dict(self._counters)
+        return {
+            "counters": counters,
+            "latency_ms": self.latency.snapshot(),
+            "batch_latency_ms": self.batch_latency.snapshot(),
+        }

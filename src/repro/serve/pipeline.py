@@ -1,0 +1,95 @@
+"""Pipelined multi-chunk retrieval: overlap host staging with device search.
+
+Every index facade chunks a large query batch into ``query_chunk``-row
+dispatches.  Called naively, each chunk pays its host→device transfer on
+the critical path: stage chunk *i*, search chunk *i*, stage chunk *i+1*,
+search chunk *i+1*, …  This module double-buffers the staging instead —
+chunk *i+1* is ``jax.device_put`` while chunk *i*'s dispatch is still
+executing (JAX dispatch is asynchronous: ``search`` returns futures, so the
+Python thread is free to stage ahead), and nothing blocks until the caller
+touches the results:
+
+    stage(0); search(0); stage(1); search(1); stage(2); ...
+              └─ device ─┘└ host ┘ (overlapped)
+
+Results are BIT-IDENTICAL to a direct ``index.search`` over the same batch:
+the same per-chunk search runs on the same rows in the same order — the
+only change is *when* the host hands each chunk to the device.  Works for
+every layout (plain / mutable / sharded / sharded-mutable): each per-chunk
+call sets ``query_chunk`` to the staged chunk's row count, so the facade's
+own pow2 bucketing and single-dispatch invariants hold unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import SearchParams
+
+__all__ = ["pipelined_search"]
+
+
+def pipelined_search(
+    index,
+    queries,
+    params: SearchParams,
+    *,
+    backend: str = "auto",
+    query_chunk: Optional[int] = None,
+    device: Optional[jax.Device] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked search with host staging overlapped against device execution.
+
+    Args:
+      index: any facade with ``search(queries, params, backend=,
+        query_chunk=)`` — :class:`~repro.index.HilbertIndex` and the
+        mutable/sharded/sharded-mutable wrappers all qualify.
+      queries: (Q, d) fp32 batch (host or device resident).
+      params: Algorithm-1 hyper-parameters, passed through per chunk.
+      backend: kernel routing, passed through per chunk.
+      query_chunk: rows per staged chunk (default: the index config's
+        ``query_chunk``), i.e. the double-buffer granularity.
+      device: staging target for plain/mutable layouts (default device when
+        ``None``).  Sharded layouts place queries themselves inside their
+        search dispatch (replicated), so staging is a host-pinning step.
+
+    Returns:
+      ``(ids (Q, k), sq_distances (Q, k))`` — bit-identical to
+      ``index.search(queries, params)``.
+    """
+    if query_chunk is None:
+        query_chunk = getattr(index, "config").query_chunk
+    qn = int(np.asarray(jnp.shape(queries))[0]) if hasattr(
+        queries, "shape"
+    ) else len(queries)
+    if qn == 0 or qn <= query_chunk:
+        # One chunk: nothing to overlap, take the direct path.
+        return index.search(
+            queries, params, backend=backend, query_chunk=query_chunk
+        )
+    q_host = np.asarray(jax.device_get(queries), np.float32)
+
+    def stage(s: int):
+        chunk = jnp.asarray(q_host[s : s + query_chunk])
+        return jax.device_put(chunk, device) if device is not None else (
+            jax.device_put(chunk)
+        )
+
+    outs_i, outs_d = [], []
+    staged = stage(0)
+    for s in range(0, qn, query_chunk):
+        nxt = s + query_chunk
+        # Dispatch the current chunk's search (async: returns futures) ...
+        ids, dists = index.search(
+            staged, params, backend=backend, query_chunk=query_chunk
+        )
+        # ... then stage the NEXT chunk while the device works on this one.
+        if nxt < qn:
+            staged = stage(nxt)
+        outs_i.append(ids)
+        outs_d.append(dists)
+    return jnp.concatenate(outs_i), jnp.concatenate(outs_d)

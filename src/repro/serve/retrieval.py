@@ -105,6 +105,7 @@ class RetrievalStore:
 
     index: Optional[MutableHilbertIndex] = None
     sharded: Optional[ShardedMutableHilbertIndex] = None
+    engine: Optional["object"] = None  # RetrievalEngine when attached
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array,
@@ -161,8 +162,34 @@ class RetrievalStore:
 
     @property
     def _impl(self):
-        """The backing mutable index, whichever layout it is."""
+        """The backing mutable index, whichever layout it is.
+
+        With a serving engine attached this is the engine's CURRENT index
+        — after a background maintenance swap the engine serves the
+        compacted copy, not the build-time object the dataclass fields
+        still reference.
+        """
+        if self.engine is not None:
+            return self.engine.index
         return self.sharded if self.is_sharded else self.index
+
+    def serving_engine(self, params: Optional[SearchParams] = None,
+                       **kwargs) -> "object":
+        """Attach a :class:`~repro.serve.engine.RetrievalEngine` over the
+        backing index and route ALL store traffic through it.
+
+        After this call :meth:`lookup` goes through the engine's admission
+        queue and micro-batcher, :meth:`append`/:meth:`delete` are routed
+        writes (logged and replayed across background compactions), and
+        :meth:`compact` becomes a forced off-path maintenance cycle with an
+        atomic index swap instead of a serving stall.  ``kwargs`` pass
+        through to the engine constructor (``start=True`` spawns the serve
+        and maintenance threads immediately).
+        """
+        from repro.serve.engine import RetrievalEngine
+
+        self.engine = RetrievalEngine(self._impl, params, **kwargs)
+        return self.engine
 
     @property
     def values(self) -> jax.Array:
@@ -171,6 +198,8 @@ class RetrievalStore:
 
     def values_at(self, ids, fill=0) -> jax.Array:
         """Gather per-entry values for search-result ids; -1 slots get fill."""
+        if self.engine is not None:
+            return self.engine.values_at(ids, fill=fill)
         return self._impl.values_at(ids, fill=fill)
 
     def append(self, keys: jax.Array, values: jax.Array) -> np.ndarray:
@@ -180,18 +209,28 @@ class RetrievalStore:
         buffer; sharded batches are routed to the shard owning each key's
         curve range and land in that shard's buffer.
         """
+        if self.engine is not None:
+            return self.engine.insert(keys, values)
         return self._impl.insert(keys, values)
 
     def delete(self, ids) -> int:
         """Tombstone datastore entries (stale documents, TTL eviction)."""
+        if self.engine is not None:
+            return self.engine.delete(ids)
         return self._impl.delete(ids)
 
     def compact(self) -> "RetrievalStore":
         """Merge segments / drop tombstones (e.g. in a maintenance window).
 
         On the sharded layout this also re-runs the global Hilbert
-        partition, re-balancing entries across shards.
+        partition, re-balancing entries across shards.  With a serving
+        engine attached this is a forced background-maintenance cycle —
+        the compaction runs on a shadow copy and the serving index is
+        atomically swapped, so concurrent lookups never stall behind it.
         """
+        if self.engine is not None:
+            self.engine.maintain_once(force=True)
+            return self
         self._impl.compact()
         return self
 
@@ -207,6 +246,8 @@ class RetrievalStore:
         interactive decode loops with varying batch shapes don't accumulate
         jit traces.
         """
+        if self.engine is not None:
+            return self.engine.search(queries, params)
         return self._impl.search(queries, params)
 
     def memory_report(self) -> dict:
@@ -233,11 +274,12 @@ class RetrievalStore:
         leave a loader preferring stale data, nor orphaned bundles eating
         disk.
         """
+        impl = self._impl  # engine-current index when an engine is attached
         if not self.is_sharded:
-            out = self.index.save(path, kind=_STORE_KIND)
+            out = impl.save(path, kind=_STORE_KIND)
             _remove_stale_layouts(path, keep="mutable")
             return out
-        out = self.sharded.save(path, kind=_SHARDED_STORE_KIND)
+        out = impl.save(path, kind=_SHARDED_STORE_KIND)
         _remove_stale_layouts(path, keep="sharded_mutable")
         return out
 

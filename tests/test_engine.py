@@ -1,0 +1,335 @@
+"""RetrievalEngine: admission, micro-batching, maintenance, swap.
+
+Single-device layouts (plain + mutable) are exercised in-process in the
+engine's deterministic step mode — no threads, the exact code path the
+serve loop runs — so bit-equality assertions are reproducible.  Threaded
+behaviour (drain, swap-under-load) uses the real serve/maintenance threads
+but keeps all determinism in the assertions: results are compared against
+a direct ``index.search`` on the index VERSION (epoch) each ticket ran
+against.  The sharded layouts run in the 8-virtual-device subprocess
+battery (``scripts/serving_check.py``), mirroring the repo's other
+multi-device suites.
+"""
+
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.types import ForestConfig, SearchParams
+from repro.data import ann_datasets
+from repro.index import HilbertIndex, IndexConfig, MutableHilbertIndex
+from repro.serve import (
+    EngineClosed,
+    MaintenancePolicy,
+    QueueFull,
+    RetrievalEngine,
+    pipelined_search,
+)
+
+N, D, Q = 2000, 32, 48
+
+CFG = IndexConfig(
+    forest=ForestConfig(n_trees=4, bits=4, key_bits=128, leaf_size=16, seed=0),
+    query_chunk=16,
+)
+SP = SearchParams(k1=16, k2=64, h=1, k=10)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    data, queries = ann_datasets.lowrank_dataset_with_queries(
+        N, Q, D, n_clusters=8, seed=0
+    )
+    return np.asarray(data), np.asarray(queries)
+
+
+@pytest.fixture(scope="module")
+def static_index(dataset):
+    data, _ = dataset
+    return HilbertIndex.build(data, config=CFG)
+
+
+def _mutable(data, n=1500):
+    mut = MutableHilbertIndex(CFG, buffer_capacity=256, max_segments=8)
+    mut.insert(data[:n])
+    return mut
+
+
+# -- step mode: batched results bit-identical to direct search ---------------
+
+
+def test_step_mode_batches_are_bit_identical_to_direct_search(
+    static_index, dataset
+):
+    """Ragged submissions, micro-batched, split back: every row equals the
+    same row of one direct ``index.search`` over the concatenated batch."""
+    _, queries = dataset
+    direct_i, direct_d = static_index.search(queries, SP)
+    eng = RetrievalEngine(static_index, SP, max_batch=16)
+    cuts = [0, 5, 8, 20, 21, 37, Q]
+    tickets = [
+        eng.submit(queries[a:b]) for a, b in zip(cuts[:-1], cuts[1:])
+    ]
+    while eng.step():
+        pass
+    got_i = np.concatenate([t.ids for t in tickets])
+    got_d = np.concatenate([t.dists for t in tickets])
+    np.testing.assert_array_equal(got_i, np.asarray(direct_i))
+    np.testing.assert_array_equal(got_d, np.asarray(direct_d))
+    # micro-batching actually happened: fewer batches than tickets
+    assert eng.metrics.counter("batches") < len(tickets)
+    assert eng.metrics.counter("completed") == len(tickets)
+    assert all(t.epoch == 0 for t in tickets)
+
+
+def test_step_mode_on_mutable_layout(dataset):
+    data, queries = dataset
+    mut = _mutable(data)
+    direct_i, direct_d = mut.search(queries, SP)
+    eng = RetrievalEngine(mut, SP)
+    ids, dists = eng.search(queries)
+    np.testing.assert_array_equal(ids, np.asarray(direct_i))
+    np.testing.assert_array_equal(dists, np.asarray(direct_d))
+
+
+def test_params_heterogeneity_splits_batches(static_index, dataset):
+    """Requests with different SearchParams never share a micro-batch (and
+    both still return the direct-search answer for their params)."""
+    _, queries = dataset
+    other = SearchParams(k1=16, k2=64, h=1, k=5)
+    eng = RetrievalEngine(static_index, SP, max_batch=64)
+    t1 = eng.submit(queries[:8], SP)
+    t2 = eng.submit(queries[8:16], other)
+    while eng.step():
+        pass
+    assert eng.metrics.counter("batches") == 2
+    di, _ = static_index.search(queries[:8], SP)
+    np.testing.assert_array_equal(t1.ids, np.asarray(di))
+    di2, _ = static_index.search(queries[8:16], other)
+    np.testing.assert_array_equal(t2.ids, np.asarray(di2))
+
+
+def test_pipelined_search_is_bit_identical(static_index, dataset):
+    """Double-buffered chunk staging changes timing, never results."""
+    _, queries = dataset
+    direct_i, direct_d = static_index.search(queries, SP)
+    pi, pd = pipelined_search(static_index, queries, SP, query_chunk=16)
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(direct_i))
+    np.testing.assert_array_equal(np.asarray(pd), np.asarray(direct_d))
+
+
+# -- maintenance + swap ------------------------------------------------------
+
+
+def test_swap_serves_each_ticket_on_a_consistent_epoch(dataset):
+    """Tickets before/after a swap each match a direct search on the index
+    version that served them; the swap itself is observable via epoch."""
+    data, queries = dataset
+    mut = _mutable(data)
+    ids0 = mut.insert(data[1500:])          # extra segments to compact
+    mut.delete(np.asarray(ids0[:100]))
+    eng = RetrievalEngine(mut, SP)
+    old_index = eng.index
+
+    t_before = eng.submit(queries)
+    while eng.step():
+        pass
+    swapped = eng.maintain_once(force=True)
+    assert swapped and eng.epoch == 1
+    assert eng.index is not old_index
+    t_after = eng.submit(queries)
+    while eng.step():
+        pass
+
+    assert t_before.epoch == 0 and t_after.epoch == 1
+    # the old index object is never mutated by the swap: a direct search
+    # on it still reproduces the pre-swap ticket bit-for-bit
+    oi, od = old_index.search(queries, SP)
+    np.testing.assert_array_equal(t_before.ids, np.asarray(oi))
+    np.testing.assert_array_equal(t_before.dists, np.asarray(od))
+    ni, nd = eng.index.search(queries, SP)
+    np.testing.assert_array_equal(t_after.ids, np.asarray(ni))
+    np.testing.assert_array_equal(t_after.dists, np.asarray(nd))
+    assert eng.metrics.counter("swaps") == 1
+
+
+def test_swap_replays_writes_received_during_shadow_compaction(dataset):
+    """Writes landing while the shadow compacts survive the swap with the
+    SAME external ids (sequential id assignment makes replay exact)."""
+    data, queries = dataset
+    mut = _mutable(data, n=1000)
+    eng = RetrievalEngine(mut, SP)
+    stop = threading.Event()
+    inserted = []
+
+    def writer():
+        s = 1000
+        while not stop.is_set() and s < N:
+            inserted.append((s, eng.insert(data[s : s + 50])))
+            s += 50
+
+    th = threading.Thread(target=writer)
+    th.start()
+    try:
+        assert eng.maintain_once(force=True)
+    finally:
+        stop.set()
+        th.join()
+    stats = eng.maintenance_stats()
+    n_written = sum(i.shape[0] for _, i in inserted)
+    assert stats["n_live"] == 1000 + n_written
+    # replayed ids are the ids the writer observed
+    for s, ids in inserted:
+        np.testing.assert_array_equal(
+            np.asarray(ids), np.arange(s, s + ids.shape[0])
+        )
+    # and the swapped index actually serves the replayed rows
+    ids, _ = eng.search(data[1000:1008])
+    assert (np.asarray(ids)[:, 0] == np.arange(1000, 1008)).all()
+
+
+def test_maintenance_policy_triggers():
+    pol = MaintenancePolicy(max_segments=4, max_tombstone_ratio=0.25)
+    base = {"n_live": 100, "mergeable_segments": 2}
+    assert not pol.triggered({**base, "n_segments": 4, "tombstone_ratio": 0.1})
+    assert pol.triggered({**base, "n_segments": 5, "tombstone_ratio": 0.1})
+    assert pol.triggered({**base, "n_segments": 2, "tombstone_ratio": 0.3})
+    # empty or point-less (store_points=False) indexes never trigger
+    assert not pol.triggered({"n_live": 0, "n_segments": 9,
+                              "mergeable_segments": 9, "tombstone_ratio": 0.9})
+    assert not pol.triggered({"n_live": 100, "n_segments": 9,
+                              "mergeable_segments": 0, "tombstone_ratio": 0.9})
+
+
+def test_static_layouts_serve_read_only(static_index, dataset):
+    eng = RetrievalEngine(static_index, SP)
+    assert eng.maintain_once(force=True) is False
+    assert eng.maintenance_stats() == {}
+    with pytest.raises(TypeError, match="immutable"):
+        eng.insert(np.zeros((1, D), np.float32))
+    with pytest.raises(TypeError, match="immutable"):
+        eng.delete(np.asarray([0]))
+
+
+# -- admission: backpressure + lifecycle -------------------------------------
+
+
+def test_queue_full_backpressure(static_index, dataset):
+    _, queries = dataset
+    eng = RetrievalEngine(static_index, SP, max_queue=2)
+    eng.submit(queries[:1])
+    eng.submit(queries[:1])
+    with pytest.raises(QueueFull):
+        eng.submit(queries[:1], block=False)
+    with pytest.raises(QueueFull):
+        eng.submit(queries[:1], timeout=0.02)
+    assert eng.metrics.counter("rejected") == 2
+    # serving one batch frees capacity
+    assert eng.step() > 0
+    eng.submit(queries[:1], block=False)
+
+
+def test_threaded_drain_and_close(static_index, dataset):
+    """stop(drain=True) serves every admitted request, then admission is
+    closed for good."""
+    _, queries = dataset
+    eng = RetrievalEngine(static_index, SP, max_batch=8, start=True)
+    tickets = [eng.submit(queries[i : i + 3]) for i in range(0, 45, 3)]
+    eng.stop(drain=True)
+    assert not eng.running
+    direct_i, _ = static_index.search(queries[:45], SP)
+    got_i = np.concatenate([t.result(0)[0] for t in tickets])
+    np.testing.assert_array_equal(got_i, np.asarray(direct_i)[:45])
+    with pytest.raises(EngineClosed):
+        eng.submit(queries[:1])
+    assert eng.metrics.counter("completed") == len(tickets)
+
+
+def test_stop_without_drain_fails_pending(static_index, dataset):
+    _, queries = dataset
+    eng = RetrievalEngine(static_index, SP)  # step mode: nothing serves
+    t = eng.submit(queries[:4])
+    eng.stop(drain=False)
+    with pytest.raises(EngineClosed):
+        t.result(0)
+
+
+def test_context_manager_drains(static_index, dataset):
+    _, queries = dataset
+    with RetrievalEngine(static_index, SP, start=True) as eng:
+        t = eng.submit(queries[:4])
+    ids, _ = t.result(0)
+    di, _ = static_index.search(queries[:4], SP)
+    np.testing.assert_array_equal(ids, np.asarray(di))
+
+
+def test_threaded_swap_under_load_is_epoch_consistent(dataset):
+    """Concurrent submit streams + a forced swap: every ticket's results
+    are bit-equal to a direct search on the epoch that served it."""
+    data, queries = dataset
+    mut = _mutable(data)
+    mut.insert(data[1500:])
+    eng = RetrievalEngine(mut, SP, maintenance=None, start=True)
+    old_index = eng.index
+    tickets = []
+    t_lock = threading.Lock()
+    stop = threading.Event()
+
+    def submitter():
+        i = 0
+        while not stop.is_set():
+            t = eng.submit(queries[i % 40 : i % 40 + 4])
+            with t_lock:
+                tickets.append(t)
+            i += 4
+
+    threads = [threading.Thread(target=submitter) for _ in range(2)]
+    for th in threads:
+        th.start()
+    try:
+        assert eng.maintain_once(force=True)
+    finally:
+        stop.set()
+        for th in threads:
+            th.join()
+        eng.stop(drain=True)
+    new_index = eng.index
+    assert new_index is not old_index
+    epochs = set()
+    for t in tickets:
+        ids, dists = t.result(5)
+        epochs.add(t.epoch)
+        served_by = old_index if t.epoch == 0 else new_index
+        di, dd = served_by.search(t.queries, SP)
+        np.testing.assert_array_equal(ids, np.asarray(di))
+        np.testing.assert_array_equal(dists, np.asarray(dd))
+    assert 1 in epochs  # at least some tickets saw the swapped index
+
+
+# -- the 8-virtual-device battery (subprocess keeps our device view) ---------
+
+
+def test_serving_8_devices():
+    script = os.path.join(
+        os.path.dirname(__file__), "..", "scripts", "serving_check.py"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (
+            os.path.join(os.path.dirname(__file__), "..", "src"),
+            env.get("PYTHONPATH", ""),
+        ) if p
+    )
+    out = subprocess.run(
+        [sys.executable, script], env=env, capture_output=True, text=True,
+        timeout=1800,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL SERVING CHECKS PASSED" in out.stdout
