@@ -233,6 +233,7 @@ class RetrievalEngine:
 
         self._state_lock = threading.Lock()   # epoch pointer + write log
         self._serve_lock = threading.RLock()  # every index operation
+        self._maint_lock = threading.Lock()   # one maintenance cycle at a time
         self._warm_queries: Dict[SearchParams, np.ndarray] = {}
         self._current = _Epoch(index, 0)
         self._write_log: Optional[List[Tuple[str, Any, Any]]] = None
@@ -291,6 +292,7 @@ class RetrievalEngine:
         if q.ndim == 1:
             q = q[None, :]
         ticket = SearchTicket(q, params or self.params)
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
             while True:
                 if self._closed:
@@ -303,11 +305,18 @@ class RetrievalEngine:
                     raise QueueFull(
                         f"admission queue at capacity ({self.max_queue})"
                     )
-                if not self._cv.wait(timeout):
+                if deadline is None:
+                    self._cv.wait()
+                    continue
+                # wait against a fixed deadline: wakeups where another
+                # submitter won the freed slot must not restart the clock
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
                     self.metrics.bump("rejected")
                     raise QueueFull(
                         f"admission queue still full after {timeout}s"
                     )
+                self._cv.wait(remaining)
             self._pending.append(ticket)
             self.metrics.bump("admitted")
             self._cv.notify_all()
@@ -523,7 +532,18 @@ class RetrievalEngine:
         ``force=True`` skips the threshold check (benchmarks use it).
         Static layouts and layouts whose segments lack stored points
         return False without touching anything.
+
+        Cycles are mutually exclusive: a concurrent caller (the
+        maintainer thread vs. a forced ``store.compact()``) blocks on an
+        internal mutex until the in-flight cycle finishes, then runs its
+        own — two interleaved cycles would clobber each other's replay
+        log (silent write loss) and race the epoch swap.
         """
+        with self._maint_lock:
+            return self._maintain_cycle(force)
+
+    def _maintain_cycle(self, force: bool) -> bool:
+        """The body of :meth:`maintain_once`; caller holds ``_maint_lock``."""
         with self._serve_lock:
             index = self.index
             if not (hasattr(index, "snapshot") and hasattr(index, "compact")):
@@ -555,24 +575,26 @@ class RetrievalEngine:
             # compile the post-swap shapes off-path (results discarded);
             # a failure here would fail identically after the swap, so
             # let it propagate and abandon the shadow instead
-            try:
-                for p, wq in list(self._warm_queries.items()):
-                    shadow.search(wq, p, backend=self.backend,
-                                  query_chunk=self.query_chunk)
-            except BaseException:
-                with self._state_lock:
-                    self._write_log = None
-                raise
+            for p, wq in list(self._warm_queries.items()):
+                shadow.search(wq, p, backend=self.backend,
+                              query_chunk=self.query_chunk)
 
         # catch-up rounds: bounded, so a writer outpacing replay can't
-        # starve the swap — the final tail drains under the serve lock
-        for _ in range(4):
+        # starve the swap — the final tail drains under the serve lock.
+        # Any failure abandons the shadow AND closes the replay log, else
+        # the write path keeps copying into a log nobody will drain.
+        try:
+            for _ in range(4):
+                with self._state_lock:
+                    log, self._write_log = self._write_log, []
+                apply(log)
+                warm()
+                if not log:
+                    break
+        except BaseException:
             with self._state_lock:
-                log, self._write_log = self._write_log, []
-            apply(log)
-            warm()
-            if not log:
-                break
+                self._write_log = None
+            raise
         with self._serve_lock:
             with self._state_lock:
                 log = self._write_log or []
@@ -620,7 +642,10 @@ class RetrievalEngine:
 
         ``drain=True`` (default) serves everything already admitted before
         the serve thread exits; ``drain=False`` fails pending tickets with
-        :class:`EngineClosed`.  Always joins both threads.  Idempotent.
+        :class:`EngineClosed`.  Always joins both threads.  Idempotent;
+        if a join times out, ``TimeoutError`` is raised with the engine
+        partially stopped (admission closed, the stuck thread's handle
+        retained) and a later ``stop()`` re-attempts the join and drain.
         """
         with self._cv:
             self._closed = True
@@ -631,8 +656,15 @@ class RetrievalEngine:
                     )
             self._cv.notify_all()
         self._stop_event.set()
+        # on join timeout the handle is RETAINED (and we raise), so a
+        # retrying stop() re-joins the same thread instead of behaving as
+        # if shutdown had completed
         if self._maintainer is not None:
             self._maintainer.join(timeout)
+            if self._maintainer.is_alive():
+                raise TimeoutError(
+                    "maintenance thread did not stop in time"
+                )
             self._maintainer = None
         if self._worker is not None:
             self._worker.join(timeout)

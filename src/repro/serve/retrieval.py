@@ -185,10 +185,19 @@ class RetrievalStore:
         atomic index swap instead of a serving stall.  ``kwargs`` pass
         through to the engine constructor (``start=True`` spawns the serve
         and maintenance threads immediately).
+
+        Calling this again replaces the engine: the previous one is
+        drained and stopped first (its serve/maintainer threads would
+        otherwise keep running — and keep swapping an index the store no
+        longer references), and the new engine wraps the index version
+        the old engine was serving at shutdown.
         """
         from repro.serve.engine import RetrievalEngine
 
-        self.engine = RetrievalEngine(self._impl, params, **kwargs)
+        if self.engine is not None:
+            self.engine.stop()
+        impl = self._impl  # old engine's current (possibly swapped) index
+        self.engine = RetrievalEngine(impl, params, **kwargs)
         return self.engine
 
     @property

@@ -15,6 +15,7 @@ import os
 import subprocess
 import sys
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -308,6 +309,144 @@ def test_threaded_swap_under_load_is_epoch_consistent(dataset):
         np.testing.assert_array_equal(ids, np.asarray(di))
         np.testing.assert_array_equal(dists, np.asarray(dd))
     assert 1 in epochs  # at least some tickets saw the swapped index
+
+
+# -- regressions: maintenance exclusion, log lifecycle, admission deadline ---
+
+
+def test_concurrent_maintenance_cycles_serialize_and_lose_no_writes(dataset):
+    """maintain_once is mutually exclusive with itself: a forced cycle
+    racing the maintainer thread must serialize on the maintenance mutex.
+    Interleaved cycles would clobber each other's replay log (silently
+    dropping writes admitted between the two snapshots) and race the
+    epoch swap."""
+    data, _ = dataset
+    mut = _mutable(data, n=1000)
+    eng = RetrievalEngine(mut, SP)
+    overlap = []
+    inside = threading.Semaphore(1)
+    orig = eng._maintain_cycle
+
+    def tracked(force):
+        if not inside.acquire(blocking=False):
+            overlap.append(True)  # two cycles in flight at once: the bug
+        try:
+            return orig(force)
+        finally:
+            inside.release()
+
+    eng._maintain_cycle = tracked
+    stop = threading.Event()
+    inserted = []
+
+    def writer():
+        s = 1000
+        while not stop.is_set() and s < N:
+            inserted.append(eng.insert(data[s : s + 25]))
+            s += 25
+
+    wth = threading.Thread(target=writer)
+    cycles = [
+        threading.Thread(target=eng.maintain_once, kwargs={"force": True})
+        for _ in range(2)
+    ]
+    wth.start()
+    for th in cycles:
+        th.start()
+    for th in cycles:
+        th.join()
+    stop.set()
+    wth.join()
+    assert not overlap
+    assert eng._write_log is None  # no cycle left the log open
+    n_written = sum(i.shape[0] for i in inserted)
+    assert eng.maintenance_stats()["n_live"] == 1000 + n_written
+
+
+def test_catchup_replay_failure_closes_the_write_log(dataset):
+    """A replay failure mid-cycle abandons the shadow AND closes the
+    replay log — otherwise every later write keeps copying into a log
+    nobody will ever drain (unbounded growth on the write path)."""
+    data, _ = dataset
+    mut = _mutable(data)
+    mut.insert(data[1500:])
+    eng = RetrievalEngine(mut, SP)
+    orig_snapshot = mut.snapshot
+
+    def snap():
+        shadow = orig_snapshot()
+        orig_compact = shadow.compact
+
+        def compact():
+            orig_compact()
+            eng.insert(data[:4])  # lands in the open replay log
+
+            def boom(*a, **k):
+                raise RuntimeError("shadow replay boom")
+
+            shadow.insert = boom
+
+        shadow.compact = compact
+        return shadow
+
+    mut.snapshot = snap
+    with pytest.raises(RuntimeError, match="shadow replay boom"):
+        eng.maintain_once(force=True)
+    assert eng._write_log is None
+    assert eng.epoch == 0  # the failed cycle never swapped
+    # serving and the write path stay healthy after the abandoned cycle
+    eng.insert(data[:1])
+    assert eng._write_log is None
+    ids, _ = eng.search(data[:8])
+    assert np.asarray(ids).shape == (8, SP.k)
+
+
+def test_submit_timeout_is_a_deadline_not_per_wakeup(static_index, dataset):
+    """Wakeups that don't free a slot (another submitter won the race)
+    must not restart the admission timeout from scratch."""
+    _, queries = dataset
+    eng = RetrievalEngine(static_index, SP, max_queue=1)
+    eng.submit(queries[:1])  # queue full; step mode, so nothing drains
+    stop = threading.Event()
+
+    def noisy_notifier():
+        while not stop.is_set():
+            with eng._cv:
+                eng._cv.notify_all()
+            time.sleep(0.02)
+
+    th = threading.Thread(target=noisy_notifier)
+    th.start()
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(QueueFull):
+            eng.submit(queries[:1], timeout=0.15)
+        elapsed = time.monotonic() - t0
+    finally:
+        stop.set()
+        th.join()
+    # pre-fix, every notify restarted the full 0.15s wait indefinitely
+    assert elapsed < 1.5
+
+
+def test_serving_engine_reattach_stops_previous_engine(dataset):
+    """RetrievalStore.serving_engine() called twice must stop the first
+    engine's threads before attaching the replacement — a live orphan
+    would keep compacting/swapping an index the store no longer serves."""
+    from repro.serve.retrieval import RetrievalStore
+
+    data, _ = dataset
+    values = np.arange(1500, dtype=np.int32)
+    store = RetrievalStore.build(data[:1500], values, CFG)
+    first = store.serving_engine(SP, start=True)
+    assert first.running
+    second = store.serving_engine(SP)
+    assert store.engine is second and second is not first
+    assert not first.running and first._maintainer is None
+    with pytest.raises(EngineClosed):
+        first.submit(data[:1])
+    ids, _ = store.lookup(data[:4], SP)
+    assert np.asarray(ids).shape == (4, SP.k)
 
 
 # -- the 8-virtual-device battery (subprocess keeps our device view) ---------
