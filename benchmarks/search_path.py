@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.data import ann_datasets
 from repro.index import ForestConfig, HilbertIndex, IndexConfig, SearchParams
+from repro.obs import accounting_snapshot
 
 
 def _time_path(index, queries, params, reps, **kw):
@@ -99,6 +100,9 @@ def main(smoke: bool = False) -> dict:
             - rep["codes_bytes"] + n * d,
         },
         "bit_identical_paths": True,
+        # measured (not structural) dispatch/recompile counters for the
+        # whole run, from the obs layer's per-site accounting
+        "dispatch_accounting": accounting_snapshot(),
     }
     result["resident_bytes"]["savings_frac"] = 1.0 - (
         result["resident_bytes"]["packed"]

@@ -14,7 +14,16 @@ sharded-mutable layout:
 * **churn_maintained** — same write load with the maintenance thread ON:
   tier compaction runs on a shadow copy off the query path and the
   serving index is atomically swapped, so the generation count stays
-  bounded while NO query ever waits on a compaction.
+  bounded while NO query ever waits on a compaction;
+* **baseline_obs** — the baseline load with span tracing toggled per
+  request (interleaved A/B within one phase): the traced-vs-untraced
+  p50 delta is the tracing/metrics tax, clean of cross-phase drift;
+* **baseline_probe** — tracing ON plus a 25% online recall probe: its
+  rolling recall is checked against an offline exact evaluation, and its
+  p50 delta prices the probe's shadow scorer (which on this CPU harness
+  contends with serving for cores).  All of it lands in the artifact's
+  ``observability`` block.  Dispatch/recompile accounting is on in every
+  phase; each phase reports its post-warmup per-site deltas.
 
 Two latency series are reported per phase:
 
@@ -93,7 +102,17 @@ def _worker(smoke: bool) -> dict:
         SearchParams,
         ShardedMutableHilbertIndex,
     )
+    from repro import obs
     from repro.launch.mesh import data_mesh
+    from repro.obs import (
+        RecallProbeConfig,
+        accounting_snapshot,
+        dispatch_counts,
+        exact_topk,
+        live_points,
+        recall_at_k,
+        recompile_counts,
+    )
     from repro.serve import MaintenancePolicy, RetrievalEngine
     from repro.serve.metrics import LatencyRecorder, percentiles
 
@@ -124,7 +143,15 @@ def _worker(smoke: bool) -> dict:
         max_segments=4, max_tombstone_ratio=0.5, poll_interval_s=0.05
     )
 
-    def run_phase(name, *, churn, maintained):
+    def run_phase(name, *, churn, maintained, obs_on=False,
+                  obs_ab=False, recall_fraction=None):
+        # obs_on: the full observability stack — span tracing, a recall
+        # probe sampling served batches — is live for the measured window
+        # (the A/B against the identical obs-off phase is the overhead
+        # number the artifact reports).  Dispatch/recompile accounting is
+        # unconditional (the scopes are always on), so every phase gets
+        # post-warmup recompile deltas for free.
+        obs.default_tracer().enabled = bool(obs_on)
         if mesh is None:
             index = MutableHilbertIndex(
                 cfg, buffer_capacity=capacity, max_segments=16
@@ -138,7 +165,10 @@ def _worker(smoke: bool) -> dict:
             )
         eng = RetrievalEngine(
             index, params,
-            maintenance=policy if maintained else None, start=True,
+            maintenance=policy if maintained else None,
+            recall=(RecallProbeConfig(fraction=recall_fraction, seed=0)
+                    if recall_fraction else None),
+            start=True,
         )
         stop = threading.Event()
         inserted_ids: list = []
@@ -180,13 +210,23 @@ def _worker(smoke: bool) -> dict:
         eng.metrics.batch_latency = LatencyRecorder()
         warm_swaps_seen = eng.metrics.counter("swaps")
         warm_s = time.perf_counter() - warm_t0
+        d_warm, r_warm = dispatch_counts(), recompile_counts()
         lat = []
+        lat_ab = {True: [], False: []}  # obs_ab: traced vs untraced
         t0 = time.perf_counter()
         try:
             for r in range(requests):
+                if obs_ab:
+                    # interleaved A/B: alternate tracing per request so
+                    # both series see identical load, cache, and thermal
+                    # conditions — phase-to-phase drift on a busy CPU
+                    # host dwarfs the tracing tax, an interleave doesn't
+                    obs.default_tracer().enabled = (r % 2 == 0)
                 ticket = eng.submit(queries)
                 ticket.result(timeout=600)
                 lat.append(ticket.latency_ms)
+                if obs_ab:
+                    lat_ab[r % 2 == 0].append(ticket.latency_ms)
         finally:
             if th is not None:
                 stop.set()
@@ -195,6 +235,33 @@ def _worker(smoke: bool) -> dict:
         wall_s = time.perf_counter() - t0
         stats = eng.maintenance_stats()
         search_ms = eng.metrics.batch_latency.samples()
+        # per-site dispatch/recompile deltas over the measured window:
+        # the steady-state invariant says the *search* sites stay at 0
+        # recompiles after warmup (seal/compact sites may legitimately
+        # compile fresh generation shapes under churn)
+        d_end, r_end = dispatch_counts(), recompile_counts()
+        dispatches_meas = {
+            s: d_end[s] - d_warm.get(s, 0)
+            for s in d_end if d_end[s] - d_warm.get(s, 0)
+        }
+        recompiles_meas = {
+            s: r_end[s] - r_warm.get(s, 0)
+            for s in r_end if r_end[s] - r_warm.get(s, 0)
+        }
+        online_recall = offline_recall = None
+        if eng.recall_probe is not None:
+            # stop(drain=True) above scored the stragglers; compare the
+            # rolling online estimate against an offline exact evaluation
+            # of the same queries on the final index state
+            online_recall = float(eng.recall_probe.recall())
+            final = eng.index
+            direct_ids, _ = final.search(queries, params)
+            truth = live_points(final)
+            if truth is not None:
+                exact = exact_topk(queries, truth[0], truth[1], params.k)
+                offline_recall = float(
+                    recall_at_k(np.asarray(direct_ids), exact).mean()
+                )
         row = {
             "phase": name,
             "requests": requests,
@@ -215,7 +282,16 @@ def _worker(smoke: bool) -> dict:
             "deletes": eng.metrics.counter("deletes"),
             "end_segments": int(stats.get("n_segments", 0)),
             "end_live": int(stats.get("n_live", 0)),
+            "obs_on": bool(obs_on),
+            "dispatches_measured": dispatches_meas,
+            "recompiles_measured": recompiles_meas,
         }
+        if online_recall is not None:
+            row["recall_online"] = online_recall
+            row["recall_offline"] = offline_recall
+        if obs_ab:
+            row["p50_obs_on"] = percentiles(lat_ab[True])["p50"]
+            row["p50_obs_off"] = percentiles(lat_ab[False])["p50"]
         print(
             f"{name}: p50={row['p50']:.1f}ms p99={row['p99']:.1f}ms "
             f"p999={row['p999']:.1f}ms qps={row['qps']:.1f} "
@@ -230,6 +306,22 @@ def _worker(smoke: bool) -> dict:
     baseline = run_phase("baseline", churn=False, maintained=False)
     churn = run_phase("churn", churn=True, maintained=False)
     maintained = run_phase("churn_maintained", churn=True, maintained=True)
+    # A/B for the observability tax: the baseline load with tracing
+    # toggled per request (interleaved within ONE phase — see run_phase).
+    # The recall probe gets its own phase: its exact shadow scoring runs
+    # on a second thread, which on this host==device harness contends
+    # with serving for the same cores, so folding it into the overhead
+    # A/B would measure core contention, not the tracing/metrics tax (on
+    # an accelerator the shadow is pure host work beside the device).
+    # Both taxes land in the artifact.
+    baseline_obs = run_phase(
+        "baseline_obs", churn=False, maintained=False, obs_ab=True,
+    )
+    baseline_probe = run_phase(
+        "baseline_probe", churn=False, maintained=False,
+        obs_on=True, recall_fraction=0.25,
+    )
+    obs.default_tracer().enabled = False
 
     ratio_churn = churn["p99"] / max(baseline["p99"], 1e-9)
     ratio_maintained = maintained["p99"] / max(baseline["p99"], 1e-9)
@@ -247,7 +339,8 @@ def _worker(smoke: bool) -> dict:
                    "k": params.k},
         "policy": {"max_segments": policy.max_segments,
                    "max_tombstone_ratio": policy.max_tombstone_ratio},
-        "phases": [baseline, churn, maintained],
+        "phases": [baseline, churn, maintained, baseline_obs,
+                   baseline_probe],
         "p99_ratio_churn_vs_baseline": float(ratio_churn),
         "p99_ratio_maintained_vs_baseline": float(ratio_maintained),
         "search_p99_ratio_churn_vs_baseline": float(s_ratio_churn),
@@ -263,10 +356,80 @@ def _worker(smoke: bool) -> dict:
             "serving device"
         ),
     }
+    # Observability acceptance block: obs tax on the request path,
+    # online-vs-offline recall agreement, and the steady-state recompile
+    # invariant over every measured window.
+    obs_overhead = (
+        baseline_obs["p50_obs_on"] / max(baseline_obs["p50_obs_off"], 1e-9)
+    ) - 1.0
+    probe_overhead = (
+        baseline_probe["p50"] / max(baseline["p50"], 1e-9)
+    ) - 1.0
+    steady_recompiles = {
+        f'{ph["phase"]}:{s}': v
+        for ph in (baseline, baseline_obs, baseline_probe)
+        for s, v in ph["recompiles_measured"].items()
+    }
+    churn_search_recompiles = {
+        f'{ph["phase"]}:{s}': v
+        for ph in (churn, maintained)
+        for s, v in ph["recompiles_measured"].items()
+        if "search" in s or s.endswith(".merge")
+    }
+    recall_delta = None
+    if baseline_probe.get("recall_offline") is not None:
+        recall_delta = abs(
+            baseline_probe["recall_online"] - baseline_probe["recall_offline"]
+        )
+    result["observability"] = {
+        "request_p50_ms_obs_off": baseline_obs["p50_obs_off"],
+        "request_p50_ms_obs_on": baseline_obs["p50_obs_on"],
+        "overhead_frac_request_p50": float(obs_overhead),
+        "overhead_within_2pct": bool(obs_overhead <= 0.02),
+        "request_p50_ms_probe_on": baseline_probe["p50"],
+        "probe_overhead_frac_request_p50": float(probe_overhead),
+        "recall_online": baseline_probe.get("recall_online"),
+        "recall_offline": baseline_probe.get("recall_offline"),
+        "recall_online_offline_abs_delta": recall_delta,
+        "recall_agrees_within_0p02": (
+            None if recall_delta is None else bool(recall_delta <= 0.02)
+        ),
+        "recall_probe_fraction": 0.25,
+        # the query-side pow2-bucket invariant: zero recompiles anywhere
+        # in the steady-state (no-write) phases after warmup
+        "steady_state_recompiles_post_warmup": steady_recompiles,
+        "steady_state_recompile_free": not steady_recompiles,
+        # under churn, a compacted/sealed generation with a NOVEL row
+        # count recompiles its per-segment search once — data-side shape
+        # instability, the open "shape-stable sealed generations"
+        # ROADMAP item; the gauge now measures it live
+        "churn_search_recompiles_post_warmup": churn_search_recompiles,
+        "dispatch_accounting": accounting_snapshot(),
+        "noise_caveat": (
+            "the tracing A/B interleaves traced/untraced requests within "
+            "one phase (phase-to-phase drift on a shared-core CPU host "
+            "dwarfs the tracing tax); the structural obs cost per "
+            "request is one disabled-tracer check, two counter bumps "
+            "per dispatch scope, and one RNG draw for the probe.  The "
+            "probe phase's extra tax vs baseline is cross-phase (noisy) "
+            "and includes its exact shadow scorer contending for the "
+            "same host cores (accelerator deployments run it beside "
+            "the device)."
+        ),
+    }
     print(f"\np99 ratios vs baseline: request churn={ratio_churn:.2f}x "
           f"maintained={ratio_maintained:.2f}x | search "
           f"churn={s_ratio_churn:.2f}x maintained={s_ratio_maintained:.2f}x "
           f"(target: maintained <= 2x)", flush=True)
+    ob = result["observability"]
+    print(f"obs: p50 {ob['request_p50_ms_obs_off']:.1f}ms -> "
+          f"{ob['request_p50_ms_obs_on']:.1f}ms "
+          f"({100 * ob['overhead_frac_request_p50']:+.1f}%; probe phase "
+          f"{ob['request_p50_ms_probe_on']:.1f}ms), "
+          f"recall online={ob['recall_online']} "
+          f"offline={ob['recall_offline']}, steady-state recompiles="
+          f"{ob['steady_state_recompiles_post_warmup'] or 0}",
+          flush=True)
     with open("BENCH_serving.json", "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(result, indent=2))

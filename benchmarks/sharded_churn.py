@@ -71,6 +71,7 @@ def _worker(smoke: bool) -> dict:
         ShardedMutableHilbertIndex,
     )
     from repro.launch.mesh import data_mesh
+    from repro.obs import accounting_snapshot
 
     n_shards = min(8, jax.device_count())
     if smoke:
@@ -212,6 +213,7 @@ def _worker(smoke: bool) -> dict:
             "per_device_bytes": rep["per_device_bytes"][0],
             "buffer_bytes": rep["buffer_bytes"],
         },
+        "dispatch_accounting": accounting_snapshot(),
     }
     with open("BENCH_sharded_churn.json", "w") as f:
         json.dump(result, f, indent=2)

@@ -72,6 +72,7 @@ def _worker(smoke: bool) -> dict:
         ShardedHilbertIndex,
     )
     from repro.launch.mesh import data_mesh
+    from repro.obs import accounting_snapshot
 
     n_shards = min(8, jax.device_count())
     if smoke:
@@ -146,6 +147,7 @@ def _worker(smoke: bool) -> dict:
                 single.memory_report()["resident_bytes"]
             ),
         },
+        "dispatch_accounting": accounting_snapshot(),
     }
     with open("BENCH_sharded.json", "w") as f:
         json.dump(result, f, indent=2)

@@ -1,0 +1,152 @@
+#!/usr/bin/env python
+"""End-to-end smoke of the observability export surface (CI gate).
+
+Starts ``launch/serve.py`` with the engine, a 100% recall probe, a
+Chrome-trace export, and the ``--metrics-port`` endpoint; waits for the
+workload to finish (the process lingers with the endpoint up); scrapes
+``/metrics`` and asserts the Prometheus exposition parses and every core
+series is present; fetches ``/trace`` and validates the Chrome-trace
+JSON (saved as a CI artifact alongside the scrape).
+
+Usage:  PYTHONPATH=src python scripts/metrics_smoke.py [outdir]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+import time
+import urllib.request
+
+# Series the obs layer must export for a serving engine under churn.
+# Counters end in _total; engine_recall_at_k / engine_segments are gauges;
+# engine_request_ms is the request-latency summary.
+CORE_SERIES = [
+    "engine_admitted_total",
+    "engine_completed_total",
+    "engine_batches_total",
+    "engine_swaps_total",
+    "engine_maintenance_runs_total",
+    "engine_recall_at_k",
+    "engine_recall_samples_total",
+    "engine_segments",
+    "engine_queue_depth",
+    "engine_request_ms",
+    "engine_queue_wait_ms",
+    "index_dispatches_total",
+    "index_recompiles_total",
+]
+
+PROM_LINE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? (NaN|[-+0-9.eE]+(?:[0-9])?)$"
+)
+
+
+def parse_prometheus(text: str) -> dict:
+    """Strict-enough exposition parse: every non-comment line must be
+    ``name{labels} value``; returns {bare metric name: sample count}."""
+    names: dict = {}
+    for line in text.splitlines():
+        if not line.strip() or line.startswith("#"):
+            continue
+        m = PROM_LINE.match(line)
+        if m is None:
+            raise SystemExit(f"unparseable exposition line: {line!r}")
+        bare = line.split("{", 1)[0].split(" ", 1)[0]
+        names[bare] = names.get(bare, 0) + 1
+    return names
+
+
+def main() -> None:
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "."
+    os.makedirs(outdir, exist_ok=True)
+    trace_path = os.path.join(outdir, "serve_trace.json")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), env.get("PYTHONPATH", "")) if p
+    )
+    env["PYTHONUNBUFFERED"] = "1"
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", "gemma3_1b", "--smoke", "--batch", "2",
+        "--prompt-len", "16", "--gen", "12",
+        "--retrieval", "--churn", "--engine",
+        "--recall-probe", "1.0",
+        "--metrics-port", "0",
+        "--trace-export", trace_path,
+        "--linger", "120",
+    ]
+    proc = subprocess.Popen(
+        cmd, env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True,
+    )
+    url = None
+    lines = []
+    try:
+        # the workload prints the ephemeral endpoint first, the trace-export
+        # line when done; scrape between those and the linger deadline
+        for line in proc.stdout:
+            lines.append(line)
+            sys.stdout.write(line)
+            m = re.search(r"metrics endpoint at (http://\S+)/metrics", line)
+            if m:
+                url = m.group(1)
+            if "wrote Chrome trace" in line:
+                break
+        if url is None:
+            raise SystemExit("serve.py never printed the metrics endpoint")
+
+        text = urllib.request.urlopen(url + "/metrics", timeout=30).read()
+        text = text.decode()
+        with open(os.path.join(outdir, "metrics_scrape.txt"), "w") as f:
+            f.write(text)
+        names = parse_prometheus(text)
+        missing = [s for s in CORE_SERIES if s not in names]
+        if missing:
+            raise SystemExit(
+                f"core series missing from /metrics: {missing}\n"
+                f"present: {sorted(names)}"
+            )
+
+        snap = json.loads(
+            urllib.request.urlopen(url + "/metrics.json", timeout=30).read()
+        )
+        admitted = snap.get("engine_admitted_total", 0)
+        if not admitted:
+            raise SystemExit("engine_admitted_total is 0: engine saw no load")
+
+        trace = json.loads(
+            urllib.request.urlopen(url + "/trace", timeout=30).read()
+        )
+        events = trace.get("traceEvents", [])
+        if not events:
+            raise SystemExit("/trace returned no span events")
+        ts = [e["ts"] for e in events]
+        if ts != sorted(ts):
+            raise SystemExit("/trace timestamps are not monotonic")
+        span_names = {e["name"] for e in events}
+        for expected in ("engine.batch", "engine.search"):
+            if expected not in span_names:
+                raise SystemExit(
+                    f"span {expected!r} missing from trace: {span_names}"
+                )
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=30)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+    print(
+        f"\nmetrics smoke OK: {len(names)} series "
+        f"({int(admitted)} requests admitted), "
+        f"{len(events)} trace events -> {trace_path}"
+    )
+
+
+if __name__ == "__main__":
+    main()

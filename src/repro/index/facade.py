@@ -36,6 +36,8 @@ from repro.core import quantize, sketch
 from repro.core import search as search_lib
 from repro.core.types import GraphParams, SearchParams
 from repro.index.config import IndexConfig
+from repro.obs.dispatch import dispatch_scope
+from repro.obs.trace import span
 
 __all__ = [
     "HilbertIndex",
@@ -270,8 +272,9 @@ class HilbertIndex:
             bucket = _pow2_bucket(m, query_chunk)
             if bucket > m:
                 q = jnp.pad(q, ((0, bucket - m), (0, 0)))
-            ids, dists = self._search_chunk(q, params, use_kernels, fused,
-                                            codes_u8)
+            with dispatch_scope("hilbert.search"):
+                ids, dists = self._search_chunk(q, params, use_kernels,
+                                                fused, codes_u8)
             if bucket > m:
                 ids, dists = ids[:m], dists[:m]
             outs_i.append(ids)
@@ -511,31 +514,41 @@ def build_with_timings(
     timings: Dict[str, float] = {}
 
     t0 = time.time()
-    if quant is None:
-        quant = quantize.fit(
-            points, bits=qcfg.bits, sample_limit=qcfg.sample_limit
-        )
-    codes = quantize.encode(quant, points)
-    jax.block_until_ready(codes)
+    with span("build.quantization", rows=int(n)), dispatch_scope(
+        "build.quantization"
+    ):
+        if quant is None:
+            quant = quantize.fit(
+                points, bits=qcfg.bits, sample_limit=qcfg.sample_limit
+            )
+        codes = quantize.encode(quant, points)
+        jax.block_until_ready(codes)
     timings["quantization"] = time.time() - t0
 
     t0 = time.time()
-    sketches = sketch.sketches_from_codes(codes, bits=qcfg.bits)
-    jax.block_until_ready(sketches)
+    with span("build.sketches"), dispatch_scope("build.sketches"):
+        sketches = sketch.sketches_from_codes(codes, bits=qcfg.bits)
+        jax.block_until_ready(sketches)
     timings["sketches"] = time.time() - t0
 
     t0 = time.time()
-    f = forest_lib.build_forest(points, fcfg)
-    jax.block_until_ready(f.orders)
+    with span("build.forest", n_trees=fcfg.n_trees), dispatch_scope(
+        "build.forest"
+    ):
+        f = forest_lib.build_forest(points, fcfg)
+        jax.block_until_ready(f.orders)
     timings["forest"] = time.time() - t0
 
     # Master order: an un-permuted Hilbert sort; vectors/sketches rearranged.
     t0 = time.time()
-    master_order, _ = search_lib.hilbert_master_sort(points, fcfg, f.lo, f.hi)
-    master_rank = jnp.zeros((n,), jnp.int32).at[master_order].set(
-        jnp.arange(n, dtype=jnp.int32)
-    )
-    jax.block_until_ready(master_order)
+    with span("build.master_sort"), dispatch_scope("build.master_sort"):
+        master_order, _ = search_lib.hilbert_master_sort(
+            points, fcfg, f.lo, f.hi
+        )
+        master_rank = jnp.zeros((n,), jnp.int32).at[master_order].set(
+            jnp.arange(n, dtype=jnp.int32)
+        )
+        jax.block_until_ready(master_order)
     timings["master_sort"] = time.time() - t0
 
     index = HilbertIndex(

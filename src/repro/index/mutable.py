@@ -54,6 +54,8 @@ from repro import checkpoint
 from repro.core import search as search_lib
 from repro.core.types import SearchParams
 from repro.index.config import IndexConfig
+from repro.obs.dispatch import dispatch_scope
+from repro.obs.trace import span
 from repro.index.facade import (
     HilbertIndex,
     load_index_bundle,
@@ -506,7 +508,9 @@ class MutableHilbertIndex:
         # points on each segment so compaction can re-sort them; False saves
         # that RAM for serving-only deployments at the cost of compaction
         # (tier merges skip point-less segments; compact() raises).
-        index = HilbertIndex.build(jnp.asarray(pts), self.config)
+        with span("lsm.segment_build", rows=int(pts.shape[0])), \
+                dispatch_scope("lsm.segment_build"):
+            index = HilbertIndex.build(jnp.asarray(pts), self.config)
         seg = Segment(index=index, ids=np.ascontiguousarray(ids, np.int32),
                       gen=self._gen)
         self._gen += 1
@@ -574,9 +578,10 @@ class MutableHilbertIndex:
         the live points in insertion order, and every tombstoned row has
         been physically dropped.  Returns self (chainable).
         """
-        self.flush()
-        if self.segments:
-            self._merge_segments(list(self.segments))
+        with span("lsm.compact", segments=len(self.segments)):
+            self.flush()
+            if self.segments:
+                self._merge_segments(list(self.segments))
         return self
 
     # -- serving-engine hooks ------------------------------------------------
@@ -696,10 +701,11 @@ class MutableHilbertIndex:
             valid = np.zeros((self.buffer_capacity,), np.bool_)
             bids = self._buf_ids[: self._buf_count]
             valid[: self._buf_count] = self._alive[bids]
-            idx, bd2 = search_lib.brute_force_topk(
-                q, jnp.asarray(self._buf_points), jnp.asarray(valid),
-                k=min(k, self.buffer_capacity),
-            )
+            with dispatch_scope("lsm.buffer_search"):
+                idx, bd2 = search_lib.brute_force_topk(
+                    q, jnp.asarray(self._buf_points), jnp.asarray(valid),
+                    k=min(k, self.buffer_capacity),
+                )
             parts_ids.append(self._buf_ids[np.asarray(idx)])
             parts_d.append(np.asarray(bd2, np.float32))
         if not parts_ids:
@@ -714,9 +720,10 @@ class MutableHilbertIndex:
         # same `merge_topk` the sharded index uses across shards.
         dead = ~self._alive[np.clip(ids, 0, max(self._next_id - 1, 0))]
         d2 = np.where(dead, np.inf, d2)
-        return search_lib.merge_topk(
-            jnp.asarray(ids, jnp.int32), jnp.asarray(d2, jnp.float32), k=k
-        )
+        with dispatch_scope("lsm.merge"):
+            return search_lib.merge_topk(
+                jnp.asarray(ids, jnp.int32), jnp.asarray(d2, jnp.float32), k=k
+            )
 
     # -- values --------------------------------------------------------------
 

@@ -68,6 +68,7 @@ from repro.core import quantize
 from repro.core import search as search_lib
 from repro.core.types import SearchParams
 from repro.index.config import IndexConfig
+from repro.obs.dispatch import dispatch_scope
 from repro.index.facade import (
     HilbertIndex,
     _pow2_bucket,
@@ -457,9 +458,10 @@ class ShardedHilbertIndex:
             bucket = _pow2_bucket(m, query_chunk)
             if bucket > m:
                 q = jnp.pad(q, ((0, bucket - m), (0, 0)))
-            ids, dists = fn(
-                q, self.stack, self.perms, self.flips, self.quant
-            )
+            with dispatch_scope("sharded.search"):
+                ids, dists = fn(
+                    q, self.stack, self.perms, self.flips, self.quant
+                )
             self.last_dispatch_count += 1
             if bucket > m:
                 ids, dists = ids[:m], dists[:m]

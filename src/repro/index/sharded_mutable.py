@@ -70,6 +70,8 @@ from repro.core import quantize
 from repro.core import search as search_lib
 from repro.core.types import SearchParams
 from repro.index.config import IndexConfig
+from repro.obs.dispatch import dispatch_scope
+from repro.obs.trace import span
 from repro.index.facade import (
     _pow2_bucket,
     build_with_timings,
@@ -580,9 +582,12 @@ class ShardedMutableHilbertIndex:
                     ids_s.astype(np.int32), reps
                 )[:n_pad]
                 pts_pad = np.tile(pts_s, (reps, 1))[:n_pad]
-            idx, _ = build_with_timings(
-                jnp.asarray(pts_pad), self.config, quant=quant
-            )
+            with span("lsm.generation_build",
+                      rows=int(pts_pad.shape[0]), shard=s), \
+                    dispatch_scope("lsm.generation_build"):
+                idx, _ = build_with_timings(
+                    jnp.asarray(pts_pad), self.config, quant=quant
+                )
             shard_indexes.append(idx)
         stack, points = stack_shard_indexes(
             self.mesh, shard_indexes, id_maps,
@@ -693,10 +698,12 @@ class ShardedMutableHilbertIndex:
         if ids.size == 0:
             self._bounds = None
             return self
-        base = ShardedHilbertIndex.build(
-            jnp.asarray(pts), self.config, mesh=self.mesh
-        )
-        self._adopt_base(base, ids)
+        with span("lsm.compact", rows=int(ids.size)), \
+                dispatch_scope("lsm.compact"):
+            base = ShardedHilbertIndex.build(
+                jnp.asarray(pts), self.config, mesh=self.mesh
+            )
+            self._adopt_base(base, ids)
         return self
 
     # -- serving-engine hooks ------------------------------------------------
@@ -889,8 +896,9 @@ class ShardedMutableHilbertIndex:
             bucket = _pow2_bucket(m, query_chunk)
             if bucket > m:
                 chunk = jnp.pad(chunk, ((0, bucket - m), (0, 0)))
-            ids, dists = fn(chunk, stacks, quants, perms, flips, bpts, bids,
-                            alive)
+            with dispatch_scope("sharded_mutable.search"):
+                ids, dists = fn(chunk, stacks, quants, perms, flips, bpts,
+                                bids, alive)
             self.last_dispatch_count += 1
             if bucket > m:
                 ids, dists = ids[:m], dists[:m]

@@ -56,7 +56,35 @@ def main() -> None:
                          "atomic index swap instead of stalling decode")
     ap.add_argument("--lam", type=float, default=0.25)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics (Prometheus), /metrics.json and "
+                         "/trace on this port (0 = ephemeral; the bound "
+                         "port is printed).  See docs/OBSERVABILITY.md")
+    ap.add_argument("--trace-export", default=None, metavar="PATH",
+                    help="enable span tracing and write a Chrome-trace "
+                         "JSON (chrome://tracing / Perfetto) on exit")
+    ap.add_argument("--recall-probe", type=float, default=None,
+                    metavar="FRACTION",
+                    help="with --engine: sample this fraction of served "
+                         "batches and score online recall@k against an "
+                         "exact shadow off the query path")
+    ap.add_argument("--linger", type=float, default=0.0, metavar="SECONDS",
+                    help="keep the process (and --metrics-port endpoint) "
+                         "alive this long after the workload finishes, so "
+                         "an external scraper can read final counters")
     args = ap.parse_args()
+
+    metrics_server = None
+    if args.metrics_port is not None:
+        from repro.obs.http import serve_metrics
+
+        metrics_server = serve_metrics(args.metrics_port)
+        print(f"[obs] metrics endpoint at {metrics_server.url}/metrics "
+              f"(also /metrics.json, /trace)", flush=True)
+    if args.trace_export:
+        from repro import obs
+
+        obs.enable()
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     rules = ShardingRules()
@@ -110,9 +138,17 @@ def main() -> None:
         if args.engine:
             # Background maintenance only makes sense when segments keep
             # their raw points (store_points tracks --churn above).
+            recall_cfg = None
+            if args.recall_probe:
+                from repro.obs.recall import RecallProbeConfig
+
+                recall_cfg = RecallProbeConfig(
+                    fraction=args.recall_probe, seed=args.seed
+                )
             engine = store.serving_engine(
                 SearchParams(k1=32, k2=64, h=1, k=8),
                 maintenance=MaintenancePolicy() if store_points else None,
+                recall=recall_cfg,
                 start=True,
             )
             print(f"[engine] {engine!r}")
@@ -167,6 +203,16 @@ def main() -> None:
     gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
     print(f"[decode] {args.gen} steps x batch {b}: {1000*dt/args.gen:.0f} ms/step")
     print("[tokens]", gen[0][:16], "...")
+    if args.trace_export:
+        from repro import obs
+
+        obs.default_tracer().dump(args.trace_export)
+        print(f"[obs] wrote Chrome trace to {args.trace_export}", flush=True)
+    if args.linger > 0:
+        print(f"[obs] lingering {args.linger:.0f}s for scrapers", flush=True)
+        time.sleep(args.linger)
+    if metrics_server is not None:
+        metrics_server.close()
 
 
 if __name__ == "__main__":

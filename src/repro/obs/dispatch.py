@@ -1,0 +1,154 @@
+"""Dispatch and recompile accounting for every jitted entry point.
+
+The repo's perf story rests on an invariant: pow2 query-bucket padding
+plus shape-stable LSM layouts mean a steady-state process holds at most
+~``log2(query_chunk)+1`` traces per jitted site and NEVER recompiles
+while serving.  Until now that was a benchmark-only assert; this module
+makes it a live counter pair per call site:
+
+* ``index_dispatches_total{site=...}`` — one per jitted call issued;
+* ``index_recompiles_total{site=...}`` — how many of those dispatches
+  triggered an XLA backend compile (a jit cache miss).  Counted per
+  dispatch, not per XLA computation: one fresh trace may compile several
+  helper computations, which would otherwise inflate the miss count.
+
+Detection uses ``jax.monitoring``: XLA emits the
+``/jax/core/compile/backend_compile_duration`` event exactly when a
+computation is actually compiled (cache hits are silent — verified
+against the pinned jax 0.4.37).  The listener runs in the thread doing
+the compile, so a thread-local count lets :func:`dispatch_scope`
+attribute compiles to the site the *current thread* is dispatching even
+while the engine's maintenance thread compiles a shadow index
+concurrently — the two threads' deltas never mix.
+
+Usage at a call site::
+
+    with dispatch_scope("facade.search"):
+        ids, dists = self._search_chunk(...)
+
+The scope is ~two counter bumps when nothing compiles; sites stay
+instrumented unconditionally.  ``compiles_total()`` is the process-wide
+compile count (warmup included), and the gauge
+``index_last_dispatch_recompiled`` is 1 exactly when the most recent
+scoped dispatch anywhere in the process compiled — the "are we in steady
+state?" light.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Iterator
+
+from .registry import default_registry
+
+__all__ = [
+    "install_compile_listener", "compiles_total", "dispatch_scope",
+    "dispatch_counts", "recompile_counts", "accounting_snapshot",
+]
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_tls = threading.local()
+_install_lock = threading.Lock()
+_installed = False
+_global_compiles = [0]          # guarded by _install_lock for writes
+
+
+def _on_event_duration(event: str, duration: float, **kw) -> None:
+    if not event.endswith("backend_compile_duration"):
+        return
+    with _install_lock:
+        _global_compiles[0] += 1
+    _tls.compiles = getattr(_tls, "compiles", 0) + 1
+
+
+def install_compile_listener() -> bool:
+    """Register the jax.monitoring listener (idempotent).
+
+    Returns False when the running jax has no duration-listener hook
+    (the accounting then still counts dispatches, with recompiles
+    pinned at 0 — absence of data, not a claim of zero compiles).
+    """
+    global _installed
+    with _install_lock:
+        if _installed:
+            return True
+        try:
+            from jax import monitoring
+            monitoring.register_event_duration_secs_listener(
+                _on_event_duration
+            )
+        except Exception:
+            return False
+        _installed = True
+        return True
+
+
+def compiles_total() -> int:
+    """Process-wide backend compiles observed since listener install."""
+    with _install_lock:
+        return _global_compiles[0]
+
+
+@contextmanager
+def dispatch_scope(site: str) -> Iterator[None]:
+    """Count one jitted dispatch at ``site``; flag it if it compiled.
+
+    Attribution is by thread-local compile delta across the body, so
+    concurrent scopes in other threads (serve vs. maintenance) don't
+    steal or leak each other's compiles.  Nested scopes both observe a
+    compile that happens in the innermost body — acceptable: outer
+    scopes wrap composite operations whose recompile *did* happen on
+    their watch.
+    """
+    install_compile_listener()
+    reg = default_registry()
+    reg.counter("index_dispatches_total", site=site).inc()
+    before = getattr(_tls, "compiles", 0)
+    try:
+        yield
+    finally:
+        delta = getattr(_tls, "compiles", 0) - before
+        gauge = reg.gauge("index_last_dispatch_recompiled")
+        if delta > 0:
+            # One scoped dispatch = at most one recompile tick, however
+            # many backend computations XLA built for it (a fresh trace
+            # compiles helper computations alongside the main one).
+            reg.counter("index_recompiles_total", site=site).inc()
+            gauge.set(1.0)
+        else:
+            gauge.set(0.0)
+
+
+def _by_site(name: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for key, val in default_registry().snapshot().items():
+        if key.startswith(name + "{"):
+            site = key.split('site="', 1)[1].split('"', 1)[0]
+            out[site] = int(val)
+    return out
+
+
+def dispatch_counts() -> Dict[str, int]:
+    """``{site: dispatches}`` for every instrumented site so far."""
+    return _by_site("index_dispatches_total")
+
+
+def recompile_counts() -> Dict[str, int]:
+    """``{site: recompiles}`` for every instrumented site so far."""
+    return _by_site("index_recompiles_total")
+
+
+def accounting_snapshot() -> Dict[str, object]:
+    """The dispatch/recompile accounting as one JSON-able block.
+
+    Benchmarks embed this in their ``BENCH_*.json`` so every artifact
+    records how many jitted dispatches the run issued per site and how
+    many of them compiled — the pow2-bucket invariant as data.
+    """
+    return {
+        "dispatches_by_site": dispatch_counts(),
+        "recompiles_by_site": recompile_counts(),
+        "backend_compiles_total": compiles_total(),
+    }

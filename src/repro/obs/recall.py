@@ -1,0 +1,262 @@
+"""Online recall estimation: sampled queries vs. an exact shadow.
+
+The paper's claim is recall at a latency/memory budget; benchmarks
+verify it offline, but a serving deployment needs to SEE recall while
+churn reshapes the index (tombstone masking, generation inflation, and
+compaction all move it).  :class:`RecallProbe` closes that loop:
+
+* ``offer()`` — called on the serving path with a served batch's queries
+  and returned ids.  A seeded coin keeps a configurable fraction; kept
+  batches pin a zero-copy ``snapshot()`` of the index they were served
+  against (so later writes can't skew the ground truth) and go on a
+  bounded pending queue.  Cost when the coin says no: one RNG draw.
+* ``score_pending()`` — called OFF the query path (the engine runs it on
+  the maintenance thread): for each pending batch, extract the live
+  points from the snapshot, brute-force exact top-k in float64 numpy on
+  the host, and score ``|approx ∩ exact| / k`` per query.  Results feed
+  a rolling window exported as the ``engine_recall_at_k`` gauge.
+
+Ground truth needs raw points: every layout built with the default
+``store_points=True`` works; with ``store_points=False`` the probe
+reports nothing rather than guessing (``engine_recall_unscorable_total``
+counts the skips).  Scoring cost is ``O(n_live * d)`` per sampled query
+— the overhead accounting lives in docs/OBSERVABILITY.md.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from .registry import MetricsRegistry, default_registry
+
+__all__ = [
+    "RecallProbeConfig", "RecallProbe", "live_points", "exact_topk",
+    "recall_at_k",
+]
+
+
+@dataclass(frozen=True)
+class RecallProbeConfig:
+    """Sampling policy for the online recall probe.
+
+    * ``fraction`` — probability a served batch is sampled (per batch,
+      not per row; a batch is scored whole).
+    * ``max_pending`` — bound on unscored sampled batches; offers beyond
+      it are dropped (counted), so a stalled scorer can't accumulate
+      snapshots without limit.
+    * ``window`` — rolling per-query recall samples retained for the
+      gauge.
+    * ``seed`` — sampling RNG seed (deterministic probes in tests).
+    """
+
+    fraction: float = 0.05
+    max_pending: int = 8
+    window: int = 512
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (0.0 <= self.fraction <= 1.0):
+            raise ValueError(f"fraction must be in [0, 1], got {self.fraction}")
+        if self.max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {self.max_pending}")
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+
+
+def live_points(index: Any) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """``(ids, points)`` of every live row in ``index``, host-side.
+
+    Handles all four facades.  Returns ``None`` when the layout cannot
+    produce exact ground truth (points not stored).  Ids are unique
+    across LSM generations — re-inserts get fresh sequential ids, so no
+    cross-generation shadowing/dedup is needed.
+    """
+    # Sharded-mutable: per-generation per-shard owned rows + buffers,
+    # tombstone-masked.  (Checked before the static facades because it
+    # is not a subclass of either.)
+    if hasattr(index, "_owned_rows"):
+        alive = index._lsm.alive
+        ids_parts: List[np.ndarray] = []
+        pts_parts: List[np.ndarray] = []
+        for seg in index.segments:
+            if seg.points is None:
+                return None
+            for s in range(index.n_shards):
+                ids, pts = index._owned_rows(seg, s)
+                keep = alive[ids]
+                ids_parts.append(ids[keep])
+                pts_parts.append(pts[keep])
+        if index._buf_count is not None:
+            for s in range(index.n_shards):
+                c = int(index._buf_count[s])
+                if c == 0:
+                    continue
+                bids = index._buf_ids[s, :c]
+                keep = alive[bids]
+                ids_parts.append(bids[keep])
+                pts_parts.append(index._buf_pts[s, :c][keep])
+        return _cat(ids_parts, pts_parts)
+
+    # Single-device mutable: sealed segments + write buffer, masked.
+    if hasattr(index, "_buf_points"):
+        alive = index._alive
+        ids_parts, pts_parts = [], []
+        for seg in index.segments:
+            if seg.index.points is None:
+                return None
+            ids = np.asarray(seg.ids)
+            keep = alive[ids]
+            ids_parts.append(ids[keep])
+            pts_parts.append(np.asarray(seg.index.points)[keep])
+        if index._buf_count:
+            bids = index._buf_ids[: index._buf_count]
+            keep = alive[bids]
+            ids_parts.append(bids[keep])
+            pts_parts.append(index._buf_points[: index._buf_count][keep])
+        return _cat(ids_parts, pts_parts)
+
+    # Sharded static: per-shard valid rows.
+    if hasattr(index, "stack"):
+        if index.points is None:
+            return None
+        ids_parts, pts_parts = [], []
+        id_map = np.asarray(index.stack.id_map)
+        pts = np.asarray(index.points)
+        for s in range(id_map.shape[0]):
+            nv = int(index.n_valid[s])
+            ids_parts.append(id_map[s, :nv])
+            pts_parts.append(pts[s, :nv])
+        return _cat(ids_parts, pts_parts)
+
+    # Static single-device: row i IS external id i.
+    if hasattr(index, "n_points"):
+        if index.points is None:
+            return None
+        pts = np.asarray(index.points)
+        return np.arange(pts.shape[0], dtype=np.int64), pts
+
+    return None
+
+
+def _cat(ids_parts, pts_parts) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    if not ids_parts:
+        return None
+    ids = np.concatenate(ids_parts).astype(np.int64)
+    pts = np.concatenate(pts_parts).astype(np.float32)
+    if ids.size == 0:
+        return None
+    return ids, pts
+
+
+def exact_topk(queries: np.ndarray, ids: np.ndarray, pts: np.ndarray,
+               k: int) -> np.ndarray:
+    """Exact L2 top-k ids per query, float64 host math.  (q, k) int64.
+
+    Rows beyond the live count are ``-1`` (matches the facades' padding
+    convention).
+    """
+    q = np.asarray(queries, np.float64)
+    p = np.asarray(pts, np.float64)
+    # ||q - p||^2 expanded; exact enough in f64 for ranking ground truth
+    d2 = (
+        (q * q).sum(1)[:, None] - 2.0 * (q @ p.T) + (p * p).sum(1)[None, :]
+    )
+    kk = min(k, ids.size)
+    part = np.argpartition(d2, kk - 1, axis=1)[:, :kk]
+    order = np.take_along_axis(d2, part, axis=1).argsort(1, kind="stable")
+    top = np.take_along_axis(part, order, axis=1)
+    out = np.full((q.shape[0], k), -1, np.int64)
+    out[:, :kk] = ids[top]
+    return out
+
+
+def recall_at_k(approx_ids: np.ndarray, exact_ids: np.ndarray) -> np.ndarray:
+    """Per-query ``|approx ∩ exact| / k`` (k = exact id columns)."""
+    a = np.asarray(approx_ids)
+    e = np.asarray(exact_ids)
+    k = e.shape[1]
+    out = np.zeros((a.shape[0],), np.float64)
+    for i in range(a.shape[0]):
+        ea = set(int(x) for x in e[i] if x >= 0)
+        aa = set(int(x) for x in a[i] if x >= 0)
+        out[i] = len(ea & aa) / max(k, 1)
+    return out
+
+
+class RecallProbe:
+    """Sampled online recall@k against an exact brute-force shadow."""
+
+    def __init__(self, config: Optional[RecallProbeConfig] = None,
+                 registry: Optional[MetricsRegistry] = None):
+        self.config = config or RecallProbeConfig()
+        reg = registry or default_registry()
+        self._rng = np.random.RandomState(self.config.seed)
+        self._lock = threading.Lock()
+        self._pending: deque = deque()
+        self._window: deque = deque(maxlen=self.config.window)
+        self._sampled = reg.counter("engine_recall_batches_sampled_total")
+        self._dropped = reg.counter("engine_recall_batches_dropped_total")
+        self._unscorable = reg.counter("engine_recall_unscorable_total")
+        self._samples = reg.counter("engine_recall_samples_total")
+        self._gauge = reg.gauge("engine_recall_at_k", fn=self.recall)
+        self._pending_gauge = reg.gauge(
+            "engine_recall_pending_batches", fn=lambda: len(self._pending)
+        )
+
+    def offer(self, queries: np.ndarray, ids: np.ndarray, k: int,
+              index: Any) -> bool:
+        """Maybe sample a served batch.  Serving-path cost: one RNG draw.
+
+        Call with the index the batch was actually served against (the
+        engine passes its checked-out epoch's index).  A kept batch pins
+        a zero-copy snapshot when the index supports one — mutable
+        layouts keep mutating after we return — and the index itself
+        when static (immutable by construction).
+        """
+        with self._lock:
+            if self._rng.random_sample() >= self.config.fraction:
+                return False
+            if len(self._pending) >= self.config.max_pending:
+                self._dropped.inc()
+                return False
+            shadow = index.snapshot() if hasattr(index, "snapshot") else index
+            self._pending.append(
+                (np.asarray(queries).copy(), np.asarray(ids).copy(),
+                 int(k), shadow)
+            )
+        self._sampled.inc()
+        return True
+
+    def score_pending(self) -> int:
+        """Score every pending batch (call OFF the query path).
+
+        Returns the number of per-query recall samples produced.
+        """
+        scored = 0
+        while True:
+            with self._lock:
+                if not self._pending:
+                    return scored
+                queries, ids, k, shadow = self._pending.popleft()
+            truth = live_points(shadow)
+            if truth is None:
+                self._unscorable.inc()
+                continue
+            exact = exact_topk(queries, truth[0], truth[1], k)
+            r = recall_at_k(ids, exact)
+            with self._lock:
+                self._window.extend(float(x) for x in r)
+            self._samples.inc(r.size)
+            scored += int(r.size)
+
+    def recall(self) -> float:
+        """Rolling mean recall@k over the window (nan before any sample)."""
+        with self._lock:
+            if not self._window:
+                return float("nan")
+            return float(np.mean(self._window))

@@ -51,6 +51,9 @@ import jax
 import numpy as np
 
 from repro.core.types import SearchParams
+from repro.obs.recall import RecallProbe, RecallProbeConfig
+from repro.obs.registry import default_registry
+from repro.obs.trace import span
 from repro.serve.metrics import EngineMetrics
 from repro.serve.pipeline import pipelined_search
 
@@ -103,13 +106,16 @@ class SearchTicket:
 
     ``epoch`` records which index version served the batch (filled at
     completion) — the engine's bit-equality contract is against a direct
-    ``search`` on THAT version.
+    ``search`` on THAT version.  The lifecycle timestamps split a
+    request's latency into its operational phases: ``submitted_at`` →
+    ``batched_at`` (queue wait) → ``completed_at`` (execution + merge).
     """
 
     def __init__(self, queries: np.ndarray, params: SearchParams):
         self.queries = queries
         self.params = params
         self.submitted_at = time.perf_counter()
+        self.batched_at: Optional[float] = None
         self.completed_at: Optional[float] = None
         self.epoch: Optional[int] = None
         self.ids: Optional[np.ndarray] = None
@@ -126,6 +132,13 @@ class SearchTicket:
         if self.completed_at is None:
             return None
         return 1000.0 * (self.completed_at - self.submitted_at)
+
+    @property
+    def queue_wait_ms(self) -> Optional[float]:
+        """Admission → batch-formation wait (None until batched)."""
+        if self.batched_at is None:
+            return None
+        return 1000.0 * (self.batched_at - self.submitted_at)
 
     def result(
         self, timeout: Optional[float] = None
@@ -196,6 +209,13 @@ class RetrievalEngine:
       maintenance: background-maintenance thresholds; ``None`` disables
         the maintainer thread (maintenance can still be driven manually
         via :meth:`maintain_once`).
+      recall: online recall probing — a
+        :class:`~repro.obs.recall.RecallProbeConfig` (or a ready
+        :class:`~repro.obs.recall.RecallProbe`) samples served batches
+        and scores them against an exact shadow OFF the query path: the
+        maintainer thread scores between cycles, or call
+        :meth:`score_recall` in step mode.  ``None`` (default) disables
+        probing entirely.
       start: spawn the serve (+ maintainer) threads immediately.  With
         ``start=False`` the engine is in deterministic step mode: drive
         :meth:`step` and :meth:`maintain_once` by hand.
@@ -217,6 +237,7 @@ class RetrievalEngine:
         backend: str = "auto",
         pipeline: bool = True,
         maintenance: Optional[MaintenancePolicy] = MaintenancePolicy(),
+        recall: Optional[Any] = None,
         start: bool = False,
     ):
         if max_queue < 1:
@@ -230,6 +251,19 @@ class RetrievalEngine:
         self.query_chunk = min(chunk, self.max_batch)
         self.maintenance = maintenance
         self.metrics = EngineMetrics()
+        if recall is None:
+            self.recall_probe: Optional[RecallProbe] = None
+        elif isinstance(recall, RecallProbe):
+            self.recall_probe = recall
+        elif isinstance(recall, RecallProbeConfig):
+            self.recall_probe = RecallProbe(recall)
+        else:
+            raise TypeError(
+                "recall must be a RecallProbeConfig or RecallProbe, got "
+                f"{type(recall).__name__}"
+            )
+        self.last_swap_timeline: Optional[Dict[str, Any]] = None
+        self._register_gauges()
 
         self._state_lock = threading.Lock()   # epoch pointer + write log
         self._serve_lock = threading.RLock()  # every index operation
@@ -247,6 +281,51 @@ class RetrievalEngine:
         self.last_maintenance_error: Optional[BaseException] = None
         if start:
             self.start()
+
+    def _register_gauges(self) -> None:
+        """Bind the ``engine_*`` callback gauges to THIS engine.
+
+        Callback gauges read live state at scrape time — no write on the
+        serving path.  Bound through a weakref so the process-global
+        registry never keeps a stopped engine alive; a dead engine's
+        gauges read ``nan`` until the next engine re-binds them.
+        """
+        import weakref
+
+        wr = weakref.ref(self)
+        reg = default_registry()
+
+        def stat(key: str, default: float = 0.0):
+            def read() -> float:
+                eng = wr()
+                if eng is None:
+                    return float("nan")
+                return float(eng.maintenance_stats().get(key, default))
+            return read
+
+        def attr(fn):
+            def read() -> float:
+                eng = wr()
+                return float("nan") if eng is None else float(fn(eng))
+            return read
+
+        reg.gauge("engine_queue_depth", fn=attr(lambda e: e.queue_depth))
+        reg.gauge("engine_epoch", fn=attr(lambda e: e.epoch))
+        reg.gauge("engine_segments", fn=stat("n_segments"))
+        reg.gauge("engine_tombstone_ratio", fn=stat("tombstone_ratio"))
+        reg.gauge("engine_live_rows", fn=stat("n_live"))
+        reg.gauge("engine_buffered_rows", fn=stat("n_buffered"))
+
+        def buffer_fill() -> float:
+            eng = wr()
+            if eng is None:
+                return float("nan")
+            cap = getattr(eng.index, "buffer_capacity", 0)
+            if not cap:
+                return 0.0
+            return float(eng.maintenance_stats().get("n_buffered", 0)) / cap
+
+        reg.gauge("engine_buffer_fill", fn=buffer_fill)
 
     # -- introspection -------------------------------------------------------
 
@@ -423,33 +502,44 @@ class RetrievalEngine:
         with self._state_lock:
             ref = self._current
             ref.checkout()
+        now = time.perf_counter()
+        for t in batch:
+            t.batched_at = now
+            self.metrics.queue_wait.record(1000.0 * (now - t.submitted_at))
         try:
             q = np.concatenate([t.queries for t in batch])
             params = batch[0].params
-            wq = self._warm_queries.get(params)
-            if wq is None or wq.shape[0] != min(
-                q.shape[0], self.query_chunk
-            ):
-                # retained so maintenance can pre-warm the shadow's
-                # compiled dispatches with a representative batch shape
-                self._warm_queries[params] = q[: self.query_chunk].copy()
-            with self._serve_lock:
-                # timed inside the lock: batch_latency is the search
-                # execution itself; queue + lock wait shows up in the
-                # per-ticket latency instead
-                t0 = time.perf_counter()
-                if self.pipeline:
-                    ids, dists = pipelined_search(
-                        ref.index, q, params, backend=self.backend,
-                        query_chunk=self.query_chunk,
-                    )
-                else:
-                    ids, dists = ref.index.search(
-                        q, params, backend=self.backend,
-                        query_chunk=self.query_chunk,
-                    )
-                ids = np.asarray(jax.device_get(ids))
-                dists = np.asarray(jax.device_get(dists))
+            with span("engine.batch", requests=len(batch),
+                      rows=int(q.shape[0]), epoch=ref.epoch):
+                wq = self._warm_queries.get(params)
+                if wq is None or wq.shape[0] != min(
+                    q.shape[0], self.query_chunk
+                ):
+                    # retained so maintenance can pre-warm the shadow's
+                    # compiled dispatches with a representative batch shape
+                    self._warm_queries[params] = q[: self.query_chunk].copy()
+                with self._serve_lock:
+                    # timed inside the lock: batch_latency is the search
+                    # execution itself; queue + lock wait shows up in the
+                    # per-ticket latency instead
+                    t0 = time.perf_counter()
+                    with span("engine.search", rows=int(q.shape[0])):
+                        if self.pipeline:
+                            ids, dists = pipelined_search(
+                                ref.index, q, params, backend=self.backend,
+                                query_chunk=self.query_chunk,
+                            )
+                        else:
+                            ids, dists = ref.index.search(
+                                q, params, backend=self.backend,
+                                query_chunk=self.query_chunk,
+                            )
+                        ids = np.asarray(jax.device_get(ids))
+                        dists = np.asarray(jax.device_get(dists))
+                    if self.recall_probe is not None:
+                        # under the serve lock: snapshot() must not race
+                        # concurrent writes to a mutable layout
+                        self.recall_probe.offer(q, ids, params.k, ref.index)
             self.metrics.batch_latency.record(
                 1000.0 * (time.perf_counter() - t0)
             )
@@ -543,75 +633,146 @@ class RetrievalEngine:
             return self._maintain_cycle(force)
 
     def _maintain_cycle(self, force: bool) -> bool:
-        """The body of :meth:`maintain_once`; caller holds ``_maint_lock``."""
-        with self._serve_lock:
-            index = self.index
-            if not (hasattr(index, "snapshot") and hasattr(index, "compact")):
-                return False
-            stats = index.maintenance_stats()
-            policy = self.maintenance or MaintenancePolicy()
-            if not force and not policy.triggered(stats):
-                return False
-            if force and stats.get("mergeable_segments", 0) < 1:
-                return False  # nothing compactable (store_points=False)
-            shadow = index.snapshot()
-            with self._state_lock:
-                self._write_log = []
-        self.metrics.bump("maintenance_runs")
-        try:
-            shadow.compact()  # off the query path: serving continues
-        except BaseException:
-            with self._state_lock:
-                self._write_log = None
-            raise
-        def apply(log):
-            for op, a, b in log:
-                if op == "insert":
-                    shadow.insert(a, b)
-                else:
-                    shadow.delete(a)
+        """The body of :meth:`maintain_once`; caller holds ``_maint_lock``.
 
-        def warm():
-            # compile the post-swap shapes off-path (results discarded);
-            # a failure here would fail identically after the swap, so
-            # let it propagate and abandon the shadow instead
-            for p, wq in list(self._warm_queries.items()):
-                shadow.search(wq, p, backend=self.backend,
-                              query_chunk=self.query_chunk)
+        Each phase is spanned and timed; the whole cycle's durations land
+        in :attr:`last_swap_timeline` (and the registry's
+        ``engine_maint_<phase>_ms`` recorders) so a swap can be read as a
+        timeline: how long the shadow compact ran, how many logged writes
+        each replay round drained, and how long the serve lock was
+        actually held for the final tail + pointer swap.
+        """
+        timeline: Dict[str, Any] = {"log_depth": 0, "replay_rounds": 0}
 
-        # catch-up rounds: bounded, so a writer outpacing replay can't
-        # starve the swap — the final tail drains under the serve lock.
-        # Any failure abandons the shadow AND closes the replay log, else
-        # the write path keeps copying into a log nobody will drain.
+        def clock(phase: str, t0: float) -> None:
+            timeline[f"{phase}_ms"] = 1000.0 * (time.perf_counter() - t0)
+
+        cycle = span("maint.cycle")
+        cycle.__enter__()
         try:
-            for _ in range(4):
+            t0 = time.perf_counter()
+            with self._serve_lock, span("maint.snapshot"):
+                index = self.index
+                if not (hasattr(index, "snapshot")
+                        and hasattr(index, "compact")):
+                    return False
+                stats = index.maintenance_stats()
+                policy = self.maintenance or MaintenancePolicy()
+                if not force and not policy.triggered(stats):
+                    return False
+                if force and stats.get("mergeable_segments", 0) < 1:
+                    return False  # nothing compactable (store_points=False)
+                shadow = index.snapshot()
                 with self._state_lock:
-                    log, self._write_log = self._write_log, []
+                    self._write_log = []
+            clock("snapshot", t0)
+            self.metrics.bump("maintenance_runs")
+            t0 = time.perf_counter()
+            try:
+                with span("maint.compact",
+                          segments=int(stats.get("n_segments", 0))):
+                    shadow.compact()  # off the query path: serving continues
+            except BaseException:
+                with self._state_lock:
+                    self._write_log = None
+                raise
+            clock("compact", t0)
+
+            def apply(log):
+                for op, a, b in log:
+                    if op == "insert":
+                        shadow.insert(a, b)
+                    else:
+                        shadow.delete(a)
+
+            def warm():
+                # compile the post-swap shapes off-path (results
+                # discarded); a failure here would fail identically after
+                # the swap, so let it propagate and abandon the shadow
+                for p, wq in list(self._warm_queries.items()):
+                    shadow.search(wq, p, backend=self.backend,
+                                  query_chunk=self.query_chunk)
+
+            # catch-up rounds: bounded, so a writer outpacing replay can't
+            # starve the swap — the final tail drains under the serve
+            # lock.  Any failure abandons the shadow AND closes the replay
+            # log, else the write path keeps copying into a log nobody
+            # will drain.
+            replay_ms = prewarm_ms = 0.0
+            try:
+                for _ in range(4):
+                    with self._state_lock:
+                        log, self._write_log = self._write_log, []
+                    timeline["log_depth"] += len(log)
+                    timeline["replay_rounds"] += 1
+                    t0 = time.perf_counter()
+                    with span("maint.replay", ops=len(log)):
+                        apply(log)
+                    replay_ms += 1000.0 * (time.perf_counter() - t0)
+                    t0 = time.perf_counter()
+                    with span("maint.prewarm",
+                              shapes=len(self._warm_queries)):
+                        warm()
+                    prewarm_ms += 1000.0 * (time.perf_counter() - t0)
+                    if not log:
+                        break
+            except BaseException:
+                with self._state_lock:
+                    self._write_log = None
+                raise
+            t0 = time.perf_counter()
+            with self._serve_lock, span("maint.swap"):
+                with self._state_lock:
+                    log = self._write_log or []
+                    self._write_log = None
+                timeline["log_depth"] += len(log)
+                timeline["tail_ops"] = len(log)
                 apply(log)
-                warm()
-                if not log:
-                    break
-        except BaseException:
-            with self._state_lock:
-                self._write_log = None
-            raise
-        with self._serve_lock:
-            with self._state_lock:
-                log = self._write_log or []
-                self._write_log = None
-            apply(log)
-            with self._state_lock:
-                old = self._current
-                self._current = _Epoch(shadow, old.epoch + 1)
-            self.metrics.bump("swaps")
-        old.wait_drained()  # in-flight batches finish on the old index
-        return True
+                with self._state_lock:
+                    old = self._current
+                    self._current = _Epoch(shadow, old.epoch + 1)
+                self.metrics.bump("swaps")
+            clock("swap", t0)
+            timeline["replay_ms"] = replay_ms
+            timeline["prewarm_ms"] = prewarm_ms
+            t0 = time.perf_counter()
+            old.wait_drained()  # in-flight batches finish on the old index
+            clock("drain", t0)
+            timeline["epoch"] = self._current.epoch
+            reg = default_registry()
+            for phase in ("snapshot", "compact", "replay", "prewarm",
+                          "swap", "drain"):
+                reg.latency(f"engine_maint_{phase}_ms", capacity=1024).record(
+                    timeline.get(f"{phase}_ms", 0.0)
+                )
+            reg.gauge("engine_maint_last_log_depth").set(
+                timeline["log_depth"]
+            )
+            self.last_swap_timeline = timeline
+            return True
+        finally:
+            cycle.__exit__(None, None, None)
+
+    def score_recall(self) -> int:
+        """Score pending recall-probe batches (exact shadow, host math).
+
+        Runs on the CALLING thread — the maintainer calls it between
+        cycles, so scoring never touches the query path; step-mode
+        engines (and engines without a maintainer) call it by hand.
+        Returns per-query samples produced (0 when probing is off).
+        """
+        if self.recall_probe is None:
+            return 0
+        with span("engine.recall_score"):
+            return self.recall_probe.score_pending()
 
     def _maintenance_loop(self) -> None:
         policy = self.maintenance or MaintenancePolicy()
         while not self._stop_event.wait(policy.poll_interval_s):
             try:
-                self.maintain_once()
+                if self.maintenance is not None:
+                    self.maintain_once()
+                self.score_recall()
             except BaseException as e:
                 # maintenance must never take serving down; surface the
                 # error for operators/tests and keep the loop alive.
@@ -629,7 +790,13 @@ class RetrievalEngine:
             target=self._serve_loop, name="retrieval-serve", daemon=True
         )
         self._worker.start()
-        if self.maintenance is not None and hasattr(self.index, "snapshot"):
+        want_maint = (
+            self.maintenance is not None and hasattr(self.index, "snapshot")
+        )
+        # the maintainer doubles as the recall scorer, so a probe-enabled
+        # engine needs the loop even over a static (no-snapshot) layout —
+        # maintain_once() is then a cheap immediate no-op
+        if want_maint or self.recall_probe is not None:
             self._maintainer = threading.Thread(
                 target=self._maintenance_loop, name="retrieval-maintenance",
                 daemon=True,
@@ -675,6 +842,7 @@ class RetrievalEngine:
         if drain:
             while self.step():
                 pass
+            self.score_recall()  # don't strand sampled batches unscored
         else:
             with self._cv:
                 while self._pending:

@@ -1,76 +1,36 @@
-"""Serving metrics: latency percentiles, counters, and queue gauges.
+"""Serving metrics: the engine's view over the process metrics registry.
 
-The engine's observability surface.  Everything is host-side and lock-free
-for readers (snapshots copy under the recorder's lock), cheap enough to
-record per request on the serving path: a latency sample is one float
-append, a counter bump one integer add.
+``LatencyRecorder`` and ``percentiles`` now live in
+:mod:`repro.obs.registry` (core/index instrumentation needs them without
+importing the serving layer) and are re-exported here unchanged for
+compatibility.  ``EngineMetrics`` remains the engine's own view — its
+counters and recorders are plain attributes the engine bumps with one
+lock each — but every bump is mirrored into the process-global registry
+(``engine_<name>_total`` counters, ``engine_request_ms`` /
+``engine_search_ms`` / ``engine_queue_wait_ms`` recorders), so the
+``/metrics`` endpoint and the JSON snapshot see the engine without the
+engine knowing about exporters.
 
-``LatencyRecorder`` keeps raw samples (bounded ring) so percentiles are
-exact over the retained window rather than histogram-bucketed — tail
-latency (p999) is the whole point of the serving engine, so the last thing
-the metrics layer should do is quantize it away.
+A latency sample is one float append, a counter bump two integer adds
+(local + registry) — still cheap enough to record per request on the
+serving path.
 """
 
 from __future__ import annotations
 
-import threading
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-import numpy as np
+from ..obs.registry import (
+    LatencyRecorder,
+    MetricsRegistry,
+    default_registry,
+    percentile_label,
+    percentiles,
+)
 
-__all__ = ["LatencyRecorder", "EngineMetrics", "percentiles"]
-
-
-def percentiles(samples_ms, points=(50.0, 99.0, 99.9)) -> Dict[str, float]:
-    """``{"p50": ..., "p99": ..., "p999": ...}`` over a sample list (ms).
-
-    Uses the nearest-rank method on the sorted samples (what a latency SLO
-    means operationally); returns an empty dict for no samples.
-    """
-    s = np.sort(np.asarray(list(samples_ms), np.float64))
-    if s.size == 0:
-        return {}
-    out = {}
-    for p in points:
-        label = f"p{p:g}".replace(".", "")
-        idx = min(s.size - 1, int(np.ceil(p / 100.0 * s.size)) - 1)
-        out[label] = float(s[max(idx, 0)])
-    return out
-
-
-class LatencyRecorder:
-    """Bounded ring of latency samples with exact percentile snapshots."""
-
-    def __init__(self, capacity: int = 65536):
-        if capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {capacity}")
-        self._cap = int(capacity)
-        self._buf = np.zeros((self._cap,), np.float64)
-        self._n = 0          # total ever recorded
-        self._lock = threading.Lock()
-
-    def record(self, latency_ms: float) -> None:
-        with self._lock:
-            self._buf[self._n % self._cap] = float(latency_ms)
-            self._n += 1
-
-    @property
-    def count(self) -> int:
-        return self._n
-
-    def samples(self) -> np.ndarray:
-        """Copy of the retained window (oldest-sample order not preserved)."""
-        with self._lock:
-            return self._buf[: min(self._n, self._cap)].copy()
-
-    def snapshot(self, points=(50.0, 99.0, 99.9)) -> Dict[str, float]:
-        s = self.samples()
-        out = percentiles(s, points)
-        out["count"] = float(self._n)
-        if s.size:
-            out["mean"] = float(s.mean())
-            out["max"] = float(s.max())
-        return out
+__all__ = [
+    "LatencyRecorder", "EngineMetrics", "percentiles", "percentile_label",
+]
 
 
 class EngineMetrics:
@@ -78,40 +38,98 @@ class EngineMetrics:
 
     * ``latency`` — submit→result wall time per request (queue wait
       included: what a caller experiences).
-    * ``batch_latency`` — device-side wall time per executed micro-batch.
+    * ``queue_wait`` — submit→batch-formation wait per request: the
+      admission-to-dispatch slice of ``latency``, the first place to
+      look when request p99 diverges from search p99.
+    * ``batch_latency`` — search execution wall time per micro-batch
+      (timed inside the serve lock: the query path proper).
     * counters — requests admitted/rejected/completed, batches executed,
       rows searched, index swaps, maintenance runs, write ops.
+
+    Registered in the process registry at construction: the latest
+    engine owns the ``engine_*`` series (an engine restart re-binds
+    them — the registry's replace semantics).
     """
 
-    def __init__(self, capacity: int = 65536):
-        self.latency = LatencyRecorder(capacity)
-        self.batch_latency = LatencyRecorder(capacity)
-        self._lock = threading.Lock()
-        self._counters: Dict[str, int] = {
-            "admitted": 0,
-            "rejected": 0,
-            "completed": 0,
-            "batches": 0,
-            "rows_searched": 0,
-            "inserts": 0,
-            "deletes": 0,
-            "swaps": 0,
-            "maintenance_runs": 0,
-        }
+    def __init__(self, capacity: int = 65536,
+                 registry: Optional[MetricsRegistry] = None):
+        self._registry = registry or default_registry()
+        self.latency = self._registry.replace_latency(
+            "engine_request_ms", capacity
+        )
+        self.queue_wait = self._registry.replace_latency(
+            "engine_queue_wait_ms", capacity
+        )
+        self._batch_latency = self._registry.replace_latency(
+            "engine_search_ms", capacity
+        )
+        self._counters: Dict[str, "object"] = {}
+        for name in ("admitted", "rejected", "completed", "batches",
+                     "rows_searched", "inserts", "deletes", "swaps",
+                     "maintenance_runs"):
+            self._counters[name] = _LocalCounter(
+                self._registry.counter(f"engine_{name}_total")
+            )
+
+    # ``batch_latency`` stays assignable: benchmarks install a fresh
+    # recorder to scope percentiles to a measurement window.  Keep the
+    # registry pointing at whichever recorder is current.
+    @property
+    def batch_latency(self) -> LatencyRecorder:
+        return self._batch_latency
+
+    @batch_latency.setter
+    def batch_latency(self, rec: LatencyRecorder) -> None:
+        self._batch_latency = rec
+        key = self._registry._key("engine_search_ms", {})
+        with self._registry._lock:
+            self._registry._metrics[key] = rec
+        rec.name, rec.labels = "engine_search_ms", {}  # type: ignore[attr-defined]
 
     def bump(self, name: str, by: int = 1) -> None:
-        with self._lock:
-            self._counters[name] = self._counters.get(name, 0) + int(by)
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = _LocalCounter(
+                self._registry.counter(f"engine_{name}_total")
+            )
+        c.inc(by)
 
     def counter(self, name: str) -> int:
-        with self._lock:
-            return self._counters.get(name, 0)
+        c = self._counters.get(name)
+        return 0 if c is None else c.value
 
     def snapshot(self) -> Dict[str, object]:
-        with self._lock:
-            counters = dict(self._counters)
+        counters = {k: v.value for k, v in sorted(self._counters.items())}
         return {
             "counters": counters,
             "latency_ms": self.latency.snapshot(),
+            "queue_wait_ms": self.queue_wait.snapshot(),
             "batch_latency_ms": self.batch_latency.snapshot(),
         }
+
+
+class _LocalCounter:
+    """Engine-local count that mirrors into a registry counter.
+
+    The local value is what ``EngineMetrics.counter()`` reports —
+    per-engine, resets with the engine — while the registry counter is
+    cumulative across engine restarts (Prometheus counters must be
+    monotonic).
+    """
+
+    __slots__ = ("_local", "_mirror")
+
+    def __init__(self, mirror):
+        self._local = 0
+        self._mirror = mirror
+
+    def inc(self, by: int = 1) -> None:
+        by = int(by)
+        with self._mirror._lock:      # one lock keeps both views in step
+            self._mirror._v += by
+            self._local += by
+
+    @property
+    def value(self) -> int:
+        with self._mirror._lock:
+            return self._local
