@@ -57,7 +57,9 @@ def main(smoke: bool = False) -> dict:
         fcfg = ForestConfig(n_trees=8, bits=4, key_bits=448, leaf_size=32)
         params = SearchParams(k1=32, k2=192, h=2, k=10)
         capacity, max_segments = 4096, 8
-    cfg = IndexConfig(forest=fcfg)
+    # pow2-padded seals: flush/merge builds land on power-of-two shapes so
+    # steady-state churn re-uses compiled kernels (asserted at the end)
+    cfg = IndexConfig(forest=fcfg, seal_pow2=True)
     total = n0 + batches * batch
     data, queries = ann_datasets.lowrank_dataset_with_queries(
         total, q, d, n_clusters=32, seed=0
@@ -125,7 +127,36 @@ def main(smoke: bool = False) -> dict:
     assert worst_gap <= 0.02, f"mutable recall fell {worst_gap:.3f} behind rebuild"
     final_frec = rows[-1][4]
     assert rec_c >= final_frec - 0.02, (rec_c, final_frec)
-    return {"rows": rows, "compacted": (mut.n_segments, rec_c, p50c, p99c)}
+
+    # -- shape stability: steady-state churn must not recompile -----------
+    # With seal_pow2, a rolling-window churn round (insert one buffer's
+    # worth, expire the previous round's rows) only produces already-seen
+    # padded build/search shapes.  Two rounds warm whatever this compacted
+    # state hasn't dispatched yet; the third must be compile-free.
+    from repro.obs.dispatch import recompile_counts
+
+    prev_round: list = []
+
+    def churn_round():
+        extra = rng.normal(size=(capacity, d)).astype(np.float32)
+        new = mut.insert(extra)       # exactly one flush (buffer was empty)
+        if prev_round:
+            mut.delete(prev_round.pop())
+        prev_round.append(new)
+        mut.search(queries_j, params)
+
+    churn_round()                     # warm-up rounds
+    churn_round()
+    before = recompile_counts()
+    churn_round()                     # asserted round
+    delta = {k: v - before.get(k, 0)
+             for k, v in recompile_counts().items() if v != before.get(k, 0)}
+    print(f"steady-state churn recompiles: {delta or 'none'}", flush=True)
+    assert not delta, (
+        f"pow2-padded steady-state churn still recompiled: {delta}"
+    )
+    return {"rows": rows, "compacted": (mut.n_segments, rec_c, p50c, p99c),
+            "steady_state_recompiles": 0}
 
 
 if __name__ == "__main__":

@@ -22,6 +22,10 @@ API (build once → search / knn_graph off the same artifact).
              per-request p50/p99/p999 with and without background
              maintenance (emits BENCH_serving.json; re-execs itself
              with 8 simulated devices)
+  durability — WAL ack-latency overhead vs sync_every and recovery
+             time vs replay-tail length; asserts the default group
+             commit stays <10% p50 on sustained ingest (emits
+             BENCH_durability.json)
 
 ``python -m benchmarks.run [names...]`` (default: all).
 """
@@ -33,7 +37,7 @@ import time
 def main() -> None:
     names = sys.argv[1:] or ["kernels", "hsort", "phases", "table2", "table1",
                              "churn", "search", "sharded", "sharded_churn",
-                             "serving"]
+                             "serving", "durability"]
     t00 = time.time()
     for name in names:
         print(f"\n===== {name} =====", flush=True)
@@ -58,6 +62,8 @@ def main() -> None:
             from benchmarks import sharded_churn as m
         elif name == "serving":
             from benchmarks import serving as m
+        elif name == "durability":
+            from benchmarks import durability as m
         else:
             raise SystemExit(f"unknown benchmark {name!r}")
         m.main()

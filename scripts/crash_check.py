@@ -1,0 +1,427 @@
+"""Subprocess crash matrix: SIGKILL at every fault point, prove recovery.
+
+The durability claim under test (docs/DURABILITY.md): with a WAL
+attached, a crash at ANY instant loses no acknowledged write, and
+recovery is *bit-equal* to a process that never crashed.  This script
+makes "any instant" concrete.  Per scenario:
+
+1. **Trace pass** — run the workload child with ``REPRO_FAULT_TRACE``
+   set and no faults armed; the child appends one line per fault-point
+   hit, enumerating every crash window the workload actually crosses.
+2. **Kill matrix** — re-run the identical child once per traced point
+   with ``REPRO_FAULTS="<point>@<hit>=kill"`` armed mid-way through that
+   point's hit count.  The child SIGKILLs itself at exactly that
+   instant (no atexit, no flushing).
+3. **Verify pass** — a fresh child loads the checkpoint + WAL from the
+   crashed working directory, rebuilds a *reference* index by replaying
+   the op ledger from scratch (ops ``[:n_acked]`` or ``[:n_acked+1]`` —
+   the one op in flight at the kill may have committed to the WAL
+   without its ack reaching the ledger), and asserts the recovered index
+   matches one of the two bit-for-bit: search ids AND distances, id
+   space, tombstones, values.
+
+Scenarios: ``mutable`` (single-device LSM), ``sharded`` (4-shard index
+on 8 virtual CPU devices; curve-routed appends), ``engine`` (writes +
+forced maintenance cycles through the serving engine — kills land
+inside the compact/replay/swap protocol).
+
+The parent stays import-light (no jax); children re-exec this file.
+
+    PYTHONPATH=src python scripts/crash_check.py            # full battery
+    PYTHONPATH=src python scripts/crash_check.py --scenario mutable
+    PYTHONPATH=src python scripts/crash_check.py --quick    # subset, CI PR lane
+
+Exit 0 = every kill produced a dead child AND a bit-equal recovery.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+)
+
+DIM = 8
+N_SHARDS = 4
+
+# Op ledgers.  Pure data so the verify child can rebuild the reference
+# exactly; ("save",) and ("maint",) are state-neutral for the id space.
+OPS_MUTABLE = [
+    ("insert", 24), ("insert", 16), ("delete", (3, 7, 11)), ("insert", 12),
+    ("save",), ("insert", 10), ("delete", (0, 20, 40)), ("insert", 20),
+    ("save",), ("insert", 8), ("delete", (55, 2)), ("insert", 6),
+]
+OPS_SHARDED = [
+    ("insert", 12), ("delete", (3, 40, 17)), ("insert", 20),
+    ("save",), ("insert", 9), ("delete", (64, 70)),
+    ("save",), ("insert", 7), ("delete", (1, 90)),
+]
+OPS_ENGINE = [
+    ("insert", 24), ("insert", 16), ("save",), ("insert", 12),
+    ("delete", (3, 7, 30)), ("maint",), ("insert", 10),
+    ("delete", (0, 41)), ("maint",), ("insert", 8),
+]
+
+
+def _points(tag: int, m: int):
+    import numpy as np
+
+    rng = np.random.default_rng(10_000 + tag)
+    pts = rng.normal(size=(m, DIM)).astype(np.float32)
+    vals = rng.integers(0, 1_000, size=(m,)).astype(np.int32)
+    return pts, vals
+
+
+def _queries():
+    import numpy as np
+
+    return np.random.default_rng(77).normal(size=(16, DIM)).astype(np.float32)
+
+
+def _config():
+    from repro.core.types import ForestConfig
+    from repro.index import IndexConfig
+
+    return IndexConfig(
+        forest=ForestConfig(n_trees=4, bits=4, key_bits=32, leaf_size=16)
+    )
+
+
+def _params():
+    from repro.core.types import SearchParams
+
+    return SearchParams(k1=16, k2=32, h=1, k=8)
+
+
+def _fresh_index(scenario: str, mesh=None):
+    """The workload's index, WAL-less; identical ctor in run + reference."""
+    if scenario == "sharded":
+        from repro.index.sharded_mutable import ShardedMutableHilbertIndex
+
+        if mesh is None:
+            from repro.launch.mesh import data_mesh
+
+            mesh = data_mesh(N_SHARDS)
+        pts, vals = _points(-1, 96)
+        return ShardedMutableHilbertIndex.build(
+            pts, _config(), mesh=mesh, values=vals,
+            buffer_capacity=8, max_segments=4,
+        )
+    from repro.index.mutable import MutableHilbertIndex
+
+    return MutableHilbertIndex(_config(), buffer_capacity=16, max_segments=4)
+
+
+def _apply(idx, engine, ckpt: str, i: int, op) -> None:
+    import numpy as np
+
+    kind = op[0]
+    writer = engine if engine is not None else idx
+    if kind == "insert":
+        pts, vals = _points(i, op[1])
+        writer.insert(pts, vals)
+    elif kind == "delete":
+        writer.delete(np.asarray(op[1], np.int32))
+    elif kind == "save":
+        idx.save(ckpt)
+    elif kind == "maint":
+        engine.maintain_once(force=True)
+    else:
+        raise ValueError(f"unknown op {op!r}")
+
+
+def _ledger_state(ops):
+    """(next_id, dead_ids, values_by_id) from pure ledger bookkeeping."""
+    nid, dead, values = 0, set(), {}
+    for i, op in enumerate(ops):
+        if op[0] == "insert":
+            _, vals = _points(i, op[1])
+            for v in vals:
+                values[nid] = int(v)
+                nid += 1
+        elif op[0] == "delete":
+            dead.update(int(x) for x in op[1])
+    return nid, dead, values
+
+
+# ---------------------------------------------------------------- children
+
+
+def child_run(scenario: str, workdir: str) -> None:
+    from repro.checkpoint import WalConfig
+
+    ckpt = os.path.join(workdir, "ckpt")
+    acks = os.path.join(workdir, "acks.jsonl")
+    # huge sync_interval: fsync points must fire at deterministic record
+    # counts, not wall-clock instants, or the kill replay drifts off the
+    # trace pass
+    wal_cfg = WalConfig(sync_every=4, sync_interval_ms=1e9)
+    engine = None
+    if scenario == "engine":
+        from repro.serve.engine import MaintenancePolicy, RetrievalEngine
+
+        idx = _fresh_index("mutable")
+        idx.enable_wal(ckpt, wal_cfg)
+        idx.save(ckpt)           # a base checkpoint to recover onto
+        _ack(acks, -1)
+        engine = RetrievalEngine(
+            idx, _params(),
+            maintenance=MaintenancePolicy(),
+            start=False,         # synchronous: deterministic fault hits
+        )
+        ops = OPS_ENGINE
+    else:
+        idx = _fresh_index(scenario)
+        idx.enable_wal(ckpt, wal_cfg)
+        if scenario == "sharded":
+            idx.save(ckpt)       # the corpus base is pre-WAL state
+            _ack(acks, -1)
+        ops = OPS_SHARDED if scenario == "sharded" else OPS_MUTABLE
+    for i, op in enumerate(ops):
+        cur = engine.index if engine is not None else idx
+        _apply(cur, engine, ckpt, i, op)
+        _ack(acks, i)
+    print("DONE")
+
+
+def _ack(path: str, i: int) -> None:
+    fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+    try:
+        os.write(fd, (json.dumps({"i": i}) + "\n").encode())
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _recover(scenario: str, ckpt: str):
+    """Load checkpoint + WAL replay; bootstrap from empty when the crash
+    beat the first manifest commit (the WAL then holds the whole history)."""
+    from repro.checkpoint import wal as wal_lib
+    from repro.index.mutable import MutableHilbertIndex, replay_wal_records
+
+    if scenario == "sharded":
+        from repro.index.sharded_mutable import ShardedMutableHilbertIndex
+        from repro.launch.mesh import data_mesh
+
+        try:
+            # recover on the WRITER's mesh: defaulting to all local devices
+            # would trigger a compact-on-load reshard (a legitimate but
+            # geometry-rewriting path) and break segment-level bit-equality
+            return ShardedMutableHilbertIndex.load(
+                ckpt, mesh=data_mesh(N_SHARDS)
+            )
+        except FileNotFoundError:
+            # killed inside the very first manifest commit: rebuild the
+            # (pre-WAL, deterministic) corpus base and replay everything
+            idx = _fresh_index("sharded")
+    else:
+        try:
+            return MutableHilbertIndex.load(ckpt)
+        except FileNotFoundError:
+            idx = _fresh_index("mutable")
+    records, wal = wal_lib.open_and_recover(wal_lib.wal_path(ckpt))
+    replay_wal_records(idx, records)
+    idx._wal = wal
+    return idx
+
+
+def _state_equal(a, b) -> bool:
+    import jax
+    import numpy as np
+
+    qa = _queries()
+    ia, da = (np.asarray(jax.device_get(x)) for x in a.search(qa, _params()))
+    ib, db = (np.asarray(jax.device_get(x)) for x in b.search(qa, _params()))
+    return (
+        np.array_equal(ia, ib)
+        and da.tobytes() == db.tobytes()
+        and a._lsm.next_id == b._lsm.next_id
+        and np.array_equal(a._lsm.alive, b._lsm.alive)
+        and np.array_equal(a._lsm.values, b._lsm.values)
+    )
+
+
+def child_verify(scenario: str, workdir: str) -> None:
+    import numpy as np
+
+    ckpt = os.path.join(workdir, "ckpt")
+    acks = os.path.join(workdir, "acks.jsonl")
+    n_acked = 0
+    if os.path.exists(acks):
+        with open(acks) as f:
+            n_acked = sum(
+                1 for line in f
+                if line.strip() and json.loads(line)["i"] >= 0
+            )
+    rec = _recover(scenario, ckpt)
+    ops = {"mutable": OPS_MUTABLE, "sharded": OPS_SHARDED,
+           "engine": OPS_ENGINE}[scenario]
+
+    if scenario == "engine":
+        # Maintenance (compact + swap) rewrites segment geometry, so the
+        # invariant is id-space exactness, not segment-level bit-equality.
+        for j in (n_acked, min(n_acked + 1, len(ops))):
+            nid, dead, values = _ledger_state(ops[:j])
+            if rec._lsm.next_id != nid:
+                continue
+            alive = np.ones(nid, np.bool_)
+            alive[sorted(dead & set(range(nid)))] = False
+            if not np.array_equal(np.asarray(rec._lsm.alive[:nid]), alive):
+                continue
+            got = np.asarray(rec._lsm.values[:nid])
+            want = np.asarray([values[i] for i in range(nid)], got.dtype)
+            if not np.array_equal(got, want):
+                continue
+            ids, _ = rec.search(_queries(), _params())
+            ids = np.asarray(ids)
+            valid = ids[ids >= 0]
+            assert alive[valid].all(), "search returned a tombstoned id"
+            print(f"VERIFIED j={j} n_acked={n_acked}")
+            return
+        raise SystemExit(f"no ledger prefix matches (n_acked={n_acked})")
+
+    mesh = rec.mesh if scenario == "sharded" else None
+    for j in (n_acked, min(n_acked + 1, len(ops))):
+        ref = _fresh_index(scenario, mesh=mesh)
+        for i, op in enumerate(ops[:j]):
+            if op[0] in ("save", "maint"):
+                continue        # state-neutral; must not touch the workdir
+            _apply(ref, None, None, i, op)
+        if _state_equal(rec, ref):
+            print(f"VERIFIED j={j} n_acked={n_acked}")
+            return
+    raise SystemExit(
+        f"recovered state matches neither ops[:{n_acked}] nor "
+        f"ops[:{n_acked + 1}] bit-for-bit"
+    )
+
+
+# ------------------------------------------------------------------ parent
+
+
+def _child_cmd(mode: str, scenario: str, workdir: str):
+    return [sys.executable, os.path.abspath(__file__),
+            "--child", mode, "--scenario", scenario, "--workdir", workdir]
+
+
+def _child_env(scenario: str, **extra) -> dict:
+    env = dict(os.environ)
+    env.pop("REPRO_FAULTS", None)
+    env.pop("REPRO_FAULT_TRACE", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    if scenario == "sharded":
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=8"
+                            ).strip()
+    env.update(extra)
+    return env
+
+
+def _run(cmd, env, timeout=600):
+    return subprocess.run(cmd, env=env, timeout=timeout,
+                          capture_output=True, text=True)
+
+
+def run_battery(scenarios, point_filter, keep: bool) -> int:
+    failures = []
+    for scenario in scenarios:
+        root = tempfile.mkdtemp(prefix=f"crash_{scenario}_")
+        trace_dir = os.path.join(root, "trace")
+        os.makedirs(trace_dir)
+        trace_file = os.path.join(trace_dir, "trace.txt")
+        print(f"[{scenario}] trace pass ...", flush=True)
+        r = _run(_child_cmd("run", scenario, trace_dir),
+                 _child_env(scenario, REPRO_FAULT_TRACE=trace_file))
+        if r.returncode != 0 or "DONE" not in r.stdout:
+            print(r.stdout[-2000:] + r.stderr[-2000:])
+            failures.append((scenario, "<trace>", "trace pass failed"))
+            continue
+        hits: dict = {}
+        with open(trace_file) as f:
+            for line in f:
+                name = line.strip()
+                if name:
+                    hits[name] = hits.get(name, 0) + 1
+        points = sorted(hits)
+        if scenario == "engine":
+            # wal.*/ckpt.* windows are already covered by the plain-index
+            # matrices; the engine lane targets the swap protocol itself
+            points = [p for p in points if p.startswith("engine.")]
+        if point_filter:
+            points = [p for p in points if any(s in p for s in point_filter)]
+        print(f"[{scenario}] {len(points)} fault points: "
+              + ", ".join(f"{p} x{hits[p]}" for p in points), flush=True)
+        for point, hit in [(p, h) for p in points
+                           for h in sorted({max(1, hits[p] // 2), hits[p]})]:
+            wd = os.path.join(root, f"{point.replace('.', '_')}_{hit}")
+            os.makedirs(wd)
+            plan = f"{point}@{hit}=kill"
+            r = _run(_child_cmd("run", scenario, wd),
+                     _child_env(scenario, REPRO_FAULTS=plan))
+            if r.returncode != -signal.SIGKILL:
+                failures.append((scenario, point,
+                                 f"child not killed (rc={r.returncode}); "
+                                 "fault point never reached?"))
+                print(f"  [{scenario}] {plan:<44} NOT KILLED", flush=True)
+                continue
+            v = _run(_child_cmd("verify", scenario, wd),
+                     _child_env(scenario))
+            if v.returncode != 0:
+                failures.append((scenario, point,
+                                 v.stdout[-400:] + v.stderr[-400:]))
+                print(f"  [{scenario}] {plan:<44} RECOVERY FAILED", flush=True)
+                continue
+            verdict = v.stdout.strip().splitlines()[-1]
+            print(f"  [{scenario}] kill @ {plan:<44} {verdict}", flush=True)
+        if not keep:
+            import shutil
+
+            shutil.rmtree(root, ignore_errors=True)
+    print()
+    if failures:
+        print(f"crash matrix: {len(failures)} FAILURE(S)")
+        for scenario, point, msg in failures:
+            print(f"  {scenario}/{point}: {msg}")
+        return 1
+    print("crash matrix: all kills recovered bit-equal, "
+          "zero acknowledged writes lost")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--child", choices=["run", "verify"], default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--workdir", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--scenario", action="append", default=None,
+                    choices=["mutable", "sharded", "engine"],
+                    help="restrict to these scenarios (default: all)")
+    ap.add_argument("--point", action="append", default=None,
+                    help="substring filter on fault-point names")
+    ap.add_argument("--quick", action="store_true",
+                    help="mutable scenario only — the PR-lane subset")
+    ap.add_argument("--keep", action="store_true",
+                    help="keep crashed workdirs for inspection")
+    args = ap.parse_args()
+    if args.child:
+        scenario = (args.scenario or ["mutable"])[0]
+        if args.child == "run":
+            child_run(scenario, args.workdir)
+        else:
+            child_verify(scenario, args.workdir)
+        return 0
+    scenarios = args.scenario or (
+        ["mutable"] if args.quick else ["mutable", "sharded", "engine"]
+    )
+    return run_battery(scenarios, args.point or [], args.keep)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

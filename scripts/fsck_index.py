@@ -1,0 +1,159 @@
+"""Offline checkpoint scrubber: verify every bundle under a directory tree.
+
+Walks PATH for ``repro.checkpoint`` bundle directories (anything holding
+``step_<n>/manifest.json``), re-hashes every array against the manifest's
+SHA-256 digests (format_version 5; older bundles get a structural check),
+and scans any ``wal.log`` for torn tails.  Run it from cron / before
+promoting a checkpoint to serving:
+
+    PYTHONPATH=src python scripts/fsck_index.py /ckpts/store
+    PYTHONPATH=src python scripts/fsck_index.py /ckpts/store --quarantine
+
+Exit code 0 = everything verifies; 1 = at least one corrupt step (with
+``--quarantine`` those are renamed to ``step_<n>.quarantine/`` so the
+online fallback — "newest step that VERIFIES" — never has to re-discover
+them).  A torn WAL tail is reported but is NOT corruption: it is the
+expected signature of a crash mid-append, and recovery truncates it.
+
+``--selftest`` builds a tiny bundle in a temp dir, flips one bit in the
+payload, and asserts detection + quarantine + fallback — the CI smoke
+that the scrubber itself works, no corpus needed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+)
+
+from repro import checkpoint  # noqa: E402
+from repro.checkpoint import wal as wal_lib  # noqa: E402
+from repro.checkpoint.checkpoint import _STEP_RE  # noqa: E402
+
+
+def find_bundle_dirs(root: str):
+    """Yield every directory under root that holds step_<n> bundles."""
+    for dirpath, dirnames, _ in os.walk(root):
+        if any(_STEP_RE.match(d) for d in dirnames):
+            yield dirpath
+            # don't descend into the step dirs themselves
+            dirnames[:] = [
+                d for d in dirnames if not _STEP_RE.match(d)
+                and not d.endswith(".tmp")
+            ]
+
+
+def scrub(root: str, quarantine: bool) -> int:
+    """Verify every step of every bundle; returns the corrupt-step count."""
+    bad = 0
+    bundles = 0
+    for bundle in sorted(find_bundle_dirs(root)):
+        bundles += 1
+        rel = os.path.relpath(bundle, root)
+        for step in checkpoint.steps_present(bundle):
+            problems = checkpoint.verify_step(bundle, step)
+            if not problems:
+                print(f"  ok        {rel}/step_{step:08d}")
+                continue
+            bad += 1
+            print(f"  CORRUPT   {rel}/step_{step:08d}")
+            for p in problems:
+                print(f"            - {p}")
+            if quarantine:
+                qdir = checkpoint.quarantine_step(bundle, step)
+                print(f"            -> quarantined as {os.path.basename(qdir)}")
+    for dirpath, _, filenames in os.walk(root):
+        for name in filenames:
+            if name != "wal.log":
+                continue
+            wpath = os.path.join(dirpath, name)
+            try:
+                records, _, torn = wal_lib.read_records(wpath)
+            except wal_lib.WalError as e:
+                bad += 1
+                print(f"  CORRUPT   {os.path.relpath(wpath, root)}: {e}")
+                continue
+            tail = " (torn tail: recovery will truncate)" if torn else ""
+            print(f"  wal       {os.path.relpath(wpath, root)}: "
+                  f"{len(records)} intact record(s){tail}")
+    if bundles == 0:
+        print(f"  (no checkpoint bundles under {root})")
+    return bad
+
+
+def selftest() -> int:
+    """Corrupt a bundle on purpose; assert detection, quarantine, fallback."""
+    import tempfile
+
+    import numpy as np
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = os.path.join(d, "bundle")
+        rng = np.random.default_rng(0)
+        tree = {"w": rng.normal(size=(64, 32)).astype(np.float32),
+                "ids": np.arange(2048, dtype=np.int32)}
+        checkpoint.save(ckpt, step=0, tree=tree, extra={})
+        checkpoint.save(ckpt, step=1, tree=tree, extra={})
+        assert checkpoint.verify_step(ckpt, 1) == [], "fresh bundle dirty?"
+        npz = os.path.join(ckpt, "step_00000001", "host0.npz")
+        size = os.path.getsize(npz)
+        with open(npz, "r+b") as f:      # flip one bit mid-payload
+            f.seek(size // 2)
+            b = f.read(1)
+            f.seek(size // 2)
+            f.write(bytes([b[0] ^ 0x10]))
+        problems = checkpoint.verify_step(ckpt, 1)
+        assert problems, "bit flip not detected"
+        print(f"  detect    step_00000001: {problems[0]}")
+        bad = scrub(ckpt, quarantine=True)
+        assert bad == 1, f"expected 1 corrupt step, scrub found {bad}"
+        assert checkpoint.latest_step(ckpt) == 0, "quarantine not hidden"
+        step = checkpoint.latest_verifiable_step(ckpt)
+        assert step == 0, f"fallback resolved {step}, want 0"
+        restored, _ = checkpoint.restore(ckpt, step, tree)
+        np.testing.assert_array_equal(restored["w"], tree["w"])
+        print("  fallback  step_00000000 restores bit-equal")
+        # torn WAL tail is reported, not fatal
+        wpath = os.path.join(ckpt, "wal.log")
+        w = wal_lib.WriteAheadLog(wpath)
+        w.append("delete", {"ids": np.arange(4, dtype=np.int32)}, {})
+        w.close()
+        with open(wpath, "ab") as f:
+            f.write(b"\x07\x00\x00\x00partial")   # mid-append crash
+        records, _, torn = wal_lib.read_records(wpath)
+        assert len(records) == 1 and torn
+        assert scrub(ckpt, quarantine=False) == 0
+    print("fsck selftest PASSED")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="verify repro checkpoint bundles offline"
+    )
+    ap.add_argument("path", nargs="?", help="checkpoint tree to scrub")
+    ap.add_argument("--quarantine", action="store_true",
+                    help="rename corrupt steps to step_<n>.quarantine/")
+    ap.add_argument("--selftest", action="store_true",
+                    help="corrupt a scratch bundle and assert detection")
+    args = ap.parse_args()
+    if args.selftest:
+        return selftest()
+    if not args.path:
+        ap.error("PATH required (or --selftest)")
+    print(f"fsck: scrubbing {args.path}")
+    bad = scrub(args.path, args.quarantine)
+    if bad:
+        print(f"fsck: {bad} corrupt step(s)"
+              + ("" if args.quarantine else " (re-run with --quarantine)"))
+        return 1
+    print("fsck: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,8 +1,23 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     AsyncCheckpointer,
+    CorruptBundleError,
     atomic_write_json,
     latest_step,
+    latest_verifiable_step,
     prune_steps,
+    quarantine_step,
     restore,
     save,
+    steps_present,
+    verify_step,
+)
+from repro.checkpoint.wal import (  # noqa: F401
+    WalConfig,
+    WalError,
+    WalRecord,
+    WalWriteError,
+    WriteAheadLog,
+    open_and_recover,
+    read_records,
+    wal_path,
 )

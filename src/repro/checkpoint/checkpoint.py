@@ -1,9 +1,17 @@
-"""Fault-tolerant checkpointing: atomic, async, elastic across meshes.
+"""Fault-tolerant checkpointing: atomic, self-verifying, async, elastic.
 
 Design (1000+-node posture):
-  * **Atomic**: write into ``step_<n>.tmp/``, fsync, rename to ``step_<n>/``.
-    A crash mid-write can never corrupt the latest restorable step;
-    ``latest_step`` only sees fully renamed directories.
+  * **Atomic**: write into ``step_<n>.tmp/``, fsync the payload and the
+    manifest, rename to ``step_<n>/``, then fsync the parent directory so
+    the rename itself is durable.  A crash mid-write can never corrupt
+    the latest restorable step; ``latest_step`` only sees fully renamed
+    directories.
+  * **Self-verifying** (format_version 5): the manifest records a
+    SHA-256 digest and byte size for every array.  ``restore`` verifies
+    what it reads; a mismatch quarantines the bundle
+    (``step_<n>.quarantine/``) and raises :class:`CorruptBundleError`,
+    and resolution helpers fall back to the newest step that *verifies*
+    rather than trusting directory listings.
   * **Elastic re-mesh**: checkpoints store *logical* arrays (gathered or
     per-host shards keyed by flat path), never device layouts.  Restore
     device_puts onto whatever mesh/sharding the new job uses — a job
@@ -15,20 +23,72 @@ Design (1000+-node posture):
   * **Multi-host**: each host writes ``host<k>.npz`` with its addressable
     shards; this container is single-host so k=0 carries everything, but
     the file layout and manifest already carry the host dimension.
+
+Crash-consistency points in the write protocol are addressable through
+:func:`repro.testing.faults.fault_point` — the subprocess battery in
+``scripts/crash_check.py`` kills the process at each of them and asserts
+recovery.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import re
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.testing.faults import fault_point
+
 _SEP = "/"
+
+# Bundle-manifest generation.  v5 = per-array SHA-256 digests + byte
+# sizes in every manifest ("digests" key); earlier manifests lack the
+# key and load without verification.  Orthogonal to the per-kind
+# ``extra["format_version"]`` (array-layout versions of the facades).
+MANIFEST_VERSION = 5
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+class CorruptBundleError(IOError):
+    """A checkpoint bundle failed integrity verification.
+
+    Carries structured context so operators (and ``fsck_index.py``) can
+    report exactly what rotted: the bundle dir, the step, and per-array
+    problem strings.  The offending bundle has already been renamed to
+    ``*.quarantine/`` when this is raised from a load path.
+    """
+
+    def __init__(self, ckpt_dir: str, step: int, problems: List[str],
+                 quarantined: Optional[str] = None):
+        detail = "; ".join(problems[:4]) + ("..." if len(problems) > 4 else "")
+        super().__init__(
+            f"corrupt checkpoint bundle {ckpt_dir}/step_{step:08d}: {detail}"
+        )
+        self.ckpt_dir = ckpt_dir
+        self.step = step
+        self.problems = problems
+        self.quarantined = quarantined
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so a just-committed rename survives power loss.
+
+    ``os.rename``/``os.replace`` are atomic but not durable: the new
+    directory entry lives in the parent, and on ext4 the parent's
+    metadata needs its own fsync to be guaranteed on disk.
+    """
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
@@ -37,6 +97,11 @@ def _flatten(tree: Any) -> Dict[str, np.ndarray]:
         key = jax.tree_util.keystr(path)
         flat[key] = np.asarray(jax.device_get(leaf))
     return flat
+
+
+def _digest(arr: np.ndarray) -> Tuple[str, int]:
+    buf = np.ascontiguousarray(arr).tobytes()
+    return hashlib.sha256(buf).hexdigest(), len(buf)
 
 
 def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
@@ -48,35 +113,49 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> s
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     flat = _flatten(tree)
-    np.savez(os.path.join(tmp, "host0.npz"), **flat)
+    npz_path = os.path.join(tmp, "host0.npz")
+    np.savez(npz_path, **flat)
+    with open(npz_path, "rb") as f:
+        os.fsync(f.fileno())
+    fault_point("ckpt.npz.post_write", path=npz_path)
     manifest = {
+        "format_version": MANIFEST_VERSION,
         "step": step,
         "n_hosts": 1,
         "leaves": {k: [list(v.shape), str(v.dtype)] for k, v in flat.items()},
+        "digests": {k: list(_digest(v)) for k, v in flat.items()},
         "extra": extra or {},
     }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+    manifest_path = os.path.join(tmp, "manifest.json")
+    with open(manifest_path, "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    fault_point("ckpt.manifest.pre_rename", path=manifest_path)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    fault_point("ckpt.manifest.post_rename", path=ckpt_dir)
+    _fsync_dir(ckpt_dir)
     return final
 
 
 def atomic_write_json(path: str, obj: Any) -> str:
-    """Write JSON via tmp + fsync + rename — the commit point for saves that
-    span several checkpoint bundles (e.g. a multi-segment mutable index):
-    write every bundle first, then this manifest; a crash in between leaves
-    the previous manifest (and whatever bundles it references) intact.
+    """Write JSON via tmp + fsync + rename + parent-dir fsync — the commit
+    point for saves that span several checkpoint bundles (e.g. a
+    multi-segment mutable index): write every bundle first, then this
+    manifest; a crash in between leaves the previous manifest (and
+    whatever bundles it references) intact.
     """
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(obj, f)
         f.flush()
         os.fsync(f.fileno())
+    fault_point("ckpt.json.pre_rename", path=tmp)
     os.replace(tmp, path)
+    fault_point("ckpt.json.post_rename", path=path)
+    _fsync_dir(os.path.dirname(os.path.abspath(path)))
     return path
 
 
@@ -87,29 +166,114 @@ def prune_steps(ckpt_dir: str, keep) -> None:
     index state, retrieval-store values, sharded-mutable buffer sidecars):
     after the new manifest commits, steps referenced by neither the new nor
     the immediately-previous manifest are dropped so repeated saves to one
-    path occupy bounded disk.  ``.tmp`` partials and non-step entries are
-    left alone; missing directories are a no-op.
+    path occupy bounded disk.  ``.tmp`` partials, ``.quarantine`` evidence
+    and non-step entries are left alone; missing directories are a no-op.
     """
     if not os.path.isdir(ckpt_dir):
         return
     keep = {k for k in keep if k is not None}
     for name in os.listdir(ckpt_dir):
-        if not name.startswith("step_") or name.endswith(".tmp"):
+        m = _STEP_RE.match(name)
+        if m is None:
             continue
-        if int(name.split("_")[1]) not in keep:
+        if int(m.group(1)) not in keep:
             shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
-    """Largest fully-written step (ignores .tmp partials)."""
+def steps_present(ckpt_dir: str) -> List[int]:
+    """All fully-renamed steps, newest first (quarantined/.tmp excluded)."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
-                steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+        m = _STEP_RE.match(name)
+        if m is not None and os.path.exists(
+            os.path.join(ckpt_dir, name, "manifest.json")
+        ):
+            steps.append(int(m.group(1)))
+    return sorted(steps, reverse=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Largest fully-written step (ignores .tmp partials + quarantine)."""
+    steps = steps_present(ckpt_dir)
+    return steps[0] if steps else None
+
+
+def quarantine_step(ckpt_dir: str, step: int) -> Optional[str]:
+    """Move a corrupt bundle aside as ``step_<n>.quarantine`` (kept as
+    evidence, invisible to step resolution).  Returns the new path."""
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not os.path.isdir(src):
+        return None
+    dst = src + ".quarantine"
+    n = 0
+    while os.path.exists(dst):
+        n += 1
+        dst = f"{src}.quarantine.{n}"
+    os.rename(src, dst)
+    _fsync_dir(ckpt_dir)
+    return dst
+
+
+def verify_step(ckpt_dir: str, step: int) -> List[str]:
+    """Scrub one bundle; returns problem strings (empty = verified).
+
+    Checks that the manifest parses, every manifest leaf is present in
+    the payload with the declared shape/dtype, and — for digest-bearing
+    (v5+) manifests — that each array's SHA-256 and byte size match.
+    Pre-v5 bundles pass when structurally sound (absence of digests is
+    not evidence of corruption).
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    problems: List[str] = []
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"manifest unreadable: {e}"]
+    digests = manifest.get("digests", {})
+    try:
+        data = np.load(os.path.join(d, "host0.npz"))
+    except Exception as e:  # BadZipFile, OSError, EOFError...
+        return [f"payload unreadable: {e}"]
+    try:
+        for key, (shape, dtype) in manifest.get("leaves", {}).items():
+            try:
+                arr = data[key]
+            except Exception as e:
+                problems.append(f"{key}: missing/unreadable ({e})")
+                continue
+            if list(arr.shape) != list(shape) or str(arr.dtype) != dtype:
+                problems.append(
+                    f"{key}: shape/dtype {arr.shape}/{arr.dtype} != "
+                    f"manifest {tuple(shape)}/{dtype}"
+                )
+                continue
+            if key in digests:
+                want_hex, want_n = digests[key]
+                got_hex, got_n = _digest(arr)
+                if got_n != want_n or got_hex != want_hex:
+                    problems.append(
+                        f"{key}: digest mismatch "
+                        f"({got_hex[:12]} != {want_hex[:12]})"
+                    )
+    finally:
+        data.close()
+    return problems
+
+
+def latest_verifiable_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step whose bundle verifies; corrupt steps are quarantined.
+
+    The durable replacement for "newest directory wins": resolution
+    degrades past rotted bundles instead of failing on them.
+    """
+    for step in steps_present(ckpt_dir):
+        if not verify_step(ckpt_dir, step):
+            return step
+        quarantine_step(ckpt_dir, step)
+    return None
 
 
 def restore(
@@ -117,33 +281,66 @@ def restore(
     step: int,
     abstract_tree: Any,
     shardings: Optional[Any] = None,
+    verify: bool = True,
 ) -> Tuple[Any, Dict]:
     """Restore onto the CURRENT mesh (elastic re-mesh).
 
     ``shardings``: optional pytree of NamedSharding matching abstract_tree;
     when given, leaves are device_put with those shardings (resharding from
     whatever layout the writing job had).
+
+    With ``verify=True`` every array read is checked against the
+    manifest digest (v5+ bundles); on mismatch the bundle is quarantined
+    and :class:`CorruptBundleError` raised.  Verification is lazy: only
+    the leaves this restore actually reads are hashed.
     """
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "host0.npz"))
+    problems: List[str] = []
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "host0.npz"))
+    except (OSError, ValueError, EOFError) as e:
+        quarantined = quarantine_step(ckpt_dir, step)
+        raise CorruptBundleError(
+            ckpt_dir, step, [f"bundle unreadable: {e}"], quarantined
+        ) from e
+    digests = manifest.get("digests", {}) if verify else {}
     leaves_paths = jax.tree_util.tree_flatten_with_path(abstract_tree)[0]
     treedef = jax.tree_util.tree_structure(abstract_tree)
     shard_leaves = (
         jax.tree_util.tree_leaves(shardings) if shardings is not None else None
     )
     out = []
-    for i, (path, leaf) in enumerate(leaves_paths):
-        key = jax.tree_util.keystr(path)
-        arr = data[key]
-        want = getattr(leaf, "dtype", None)
-        if want is not None and arr.dtype != want:
-            arr = arr.astype(want)
-        if shard_leaves is not None:
-            out.append(jax.device_put(arr, shard_leaves[i]))
-        else:
-            out.append(jax.device_put(arr))
+    try:
+        for i, (path, leaf) in enumerate(leaves_paths):
+            key = jax.tree_util.keystr(path)
+            try:
+                arr = data[key]
+            except Exception as e:
+                problems.append(f"{key}: missing/unreadable ({e})")
+                break
+            if key in digests:
+                want_hex, want_n = digests[key]
+                got_hex, got_n = _digest(arr)
+                if got_n != want_n or got_hex != want_hex:
+                    problems.append(
+                        f"{key}: digest mismatch "
+                        f"({got_hex[:12]} != {want_hex[:12]})"
+                    )
+                    break
+            want = getattr(leaf, "dtype", None)
+            if want is not None and arr.dtype != want:
+                arr = arr.astype(want)
+            if shard_leaves is not None:
+                out.append(jax.device_put(arr, shard_leaves[i]))
+            else:
+                out.append(jax.device_put(arr))
+    finally:
+        data.close()
+    if problems:
+        quarantined = quarantine_step(ckpt_dir, step)
+        raise CorruptBundleError(ckpt_dir, step, problems, quarantined)
     return jax.tree_util.tree_unflatten(treedef, out), manifest
 
 

@@ -51,6 +51,14 @@ class IndexConfig:
         config describes a deployment that must absorb inserts/deletes
         while serving.  Build-time only: it changes which facade wraps the
         arrays, never the arrays themselves.
+      seal_pow2: pad LSM *seal* builds (flushes and tier merges, never
+        ``compact()`` or bulk loads) up to power-of-two row counts by
+        cyclically repeating real rows.  Steady-state churn then recycles
+        a handful of segment shapes instead of minting a new one per
+        seal, so the jitted search stops recompiling once warm — the
+        recompile gauge assert in ``benchmarks/churn.py``.  Costs a
+        bounded amount of redundant rows (< 2x) and a matching top-k
+        inflation; results stay exact w.r.t. the live rows.
     """
 
     forest: ForestConfig = ForestConfig()
@@ -59,6 +67,7 @@ class IndexConfig:
     query_chunk: int = 2048
     shards: Optional[int] = None
     mutable: bool = False
+    seal_pow2: bool = False
 
     def to_dict(self) -> Dict[str, Any]:
         """Manifest form of the config (the checkpoint round-trip).
@@ -74,6 +83,7 @@ class IndexConfig:
             "query_chunk": self.query_chunk,
             "shards": self.shards,
             "mutable": self.mutable,
+            "seal_pow2": self.seal_pow2,
         }
 
     @classmethod
@@ -94,4 +104,5 @@ class IndexConfig:
             query_chunk=int(d.get("query_chunk", 2048)),
             shards=None if shards is None else int(shards),
             mutable=bool(d.get("mutable", False)),
+            seal_pow2=bool(d.get("seal_pow2", False)),
         )

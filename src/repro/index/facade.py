@@ -428,7 +428,14 @@ def save_index_bundle(
         if k in extra:
             raise ValueError(f"extra_meta key {k!r} collides with a reserved key")
     extra.update(extra_meta or {})
-    return checkpoint.save(path, step=0, tree=bundle, extra=extra)
+    # Fresh step per save with one generation of grace: if the newest
+    # bundle is later found rotted (digest mismatch) it is quarantined
+    # and loads fall back to the previous, still-verifiable step.
+    prev = checkpoint.latest_step(path)
+    step = 0 if prev is None else prev + 1
+    final = checkpoint.save(path, step=step, tree=bundle, extra=extra)
+    checkpoint.prune_steps(path, {step, prev})
+    return final
 
 
 def load_index_bundle(
@@ -438,12 +445,38 @@ def load_index_bundle(
 
     Returns ``(index, extra_arrays, manifest_extra)``; sidecar array dtypes
     come from the manifest, index leaf dtypes from the static schema.
+
+    Resolution is corruption-aware: if the newest step fails digest
+    verification mid-restore it is quarantined (``*.quarantine/``) and
+    the next-newest step is tried, so a bit-flipped bundle degrades to
+    the previous verifiable save instead of a crash or — worse — a
+    silently wrong index.
     """
-    step = checkpoint.latest_step(path)
-    if step is None:
-        raise FileNotFoundError(f"no HilbertIndex checkpoint under {path!r}")
-    with open(os.path.join(path, f"step_{step:08d}", "manifest.json")) as f:
-        manifest = json.load(f)
+    last_err: Optional[checkpoint.CorruptBundleError] = None
+    while True:
+        step = checkpoint.latest_step(path)
+        if step is None:
+            if last_err is not None:
+                raise last_err
+            raise FileNotFoundError(f"no HilbertIndex checkpoint under {path!r}")
+        try:
+            return _load_index_bundle_step(path, step, kind=kind)
+        except checkpoint.CorruptBundleError as e:
+            # restore() has quarantined the step; retry resolves older.
+            last_err = e
+
+
+def _load_index_bundle_step(
+    path: str, step: int, *, kind: str
+) -> Tuple[HilbertIndex, Dict[str, jax.Array], Dict]:
+    try:
+        with open(os.path.join(path, f"step_{step:08d}", "manifest.json")) as f:
+            manifest = json.load(f)
+    except ValueError as e:
+        quarantined = checkpoint.quarantine_step(path, step)
+        raise checkpoint.CorruptBundleError(
+            path, step, [f"manifest unparseable: {e}"], quarantined
+        ) from e
     extra = manifest.get("extra", {})
     if extra.get("kind") != kind:
         raise ValueError(

@@ -51,11 +51,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
+from repro.checkpoint import wal as wal_lib
 from repro.core import search as search_lib
 from repro.core.types import SearchParams
 from repro.index.config import IndexConfig
 from repro.obs.dispatch import dispatch_scope
 from repro.obs.trace import span
+from repro.testing.faults import fault_point
 from repro.index.facade import (
     HilbertIndex,
     load_index_bundle,
@@ -66,8 +68,10 @@ __all__ = [
     "LsmIdSpace",
     "MutableHilbertIndex",
     "Segment",
+    "WalFacade",
     "dense_values_at",
     "load_mutable_bundle",
+    "replay_wal_records",
     "save_mutable_bundle",
 ]
 
@@ -90,6 +94,11 @@ _MANIFEST = "mutable_manifest.json"
 _SEGMENT_KIND = "mutable_segment"
 _DEFAULT_KIND = "mutable_hilbert_index"
 _MAX_IDS = 2**31 - 1  # external ids are int32
+
+
+def _pow2_ceil(x: int) -> int:
+    """Smallest power of two >= x (>= 1)."""
+    return 1 << max(0, int(x) - 1).bit_length()
 
 
 class LsmIdSpace:
@@ -236,6 +245,11 @@ class Segment:
     index: HilbertIndex
     ids: np.ndarray  # (n,) int32, ascending external ids
     gen: int  # monotone generation tag (stable on-disk segment name)
+    # With IndexConfig.seal_pow2, seal builds cyclically repeat real rows
+    # up to a power-of-two count for shape-stable jitted search; rows past
+    # ``n_valid`` are duplicates of earlier ones (same external id, so the
+    # cross-source merge dedups them).  -1 = unpadded (n_valid == n_points).
+    n_valid: int = -1
     # dead-count cache: recomputed only when the owner's delete epoch moves.
     dead_cache: int = dataclasses.field(default=-1, repr=False)
     dead_epoch: int = dataclasses.field(default=-1, repr=False)
@@ -243,6 +257,15 @@ class Segment:
     @property
     def n_points(self) -> int:
         return int(self.ids.shape[0])
+
+    @property
+    def n_real(self) -> int:
+        """Rows that are NOT pow2 padding duplicates (a prefix of ids)."""
+        return self.n_valid if self.n_valid >= 0 else self.n_points
+
+    @property
+    def n_pad(self) -> int:
+        return self.n_points - self.n_real
 
     def memory_bytes(self) -> int:
         return self.index.memory_report()["resident_bytes"] + self.ids.nbytes
@@ -267,7 +290,74 @@ class Segment:
         return h.hexdigest()
 
 
-class MutableHilbertIndex:
+class WalFacade:
+    """WAL attachment + log-then-apply hooks shared by both mutable facades.
+
+    Host classes provide ``self._lsm`` (an :class:`LsmIdSpace`),
+    ``self._dim``, and initialise ``self._wal = None``.  Mutating methods
+    call :meth:`_wal_log_insert` / :meth:`_wal_log_delete` BEFORE touching
+    any state: the record is durable (or the append raised) by the time the
+    op applies, so an acknowledged mutation can never be lost to a crash.
+    """
+
+    _wal: Optional[wal_lib.WriteAheadLog]
+
+    @property
+    def wal(self) -> Optional[wal_lib.WriteAheadLog]:
+        return self._wal
+
+    def enable_wal(
+        self, path: str, config: Optional[wal_lib.WalConfig] = None
+    ) -> wal_lib.WriteAheadLog:
+        """Attach a write-ahead log at ``<path>/wal.log``.
+
+        ``path`` is the checkpoint directory this index saves to:
+        ``save(path)`` truncates the log at its commit point, and
+        ``load(path)`` replays + re-attaches it automatically.  The file
+        must be fresh (no unreplayed records) — recovering an existing
+        log is ``load()``'s job, not this method's.
+        """
+        if self._wal is not None:
+            raise ValueError("a WAL is already attached to this index")
+        os.makedirs(path, exist_ok=True)
+        self._wal = wal_lib.WriteAheadLog(wal_lib.wal_path(path), config)
+        return self._wal
+
+    def detach_wal(self) -> Optional[wal_lib.WriteAheadLog]:
+        """Detach (without closing) and return the WAL, if any."""
+        w, self._wal = self._wal, None
+        return w
+
+    def _wal_log_insert(self, op: str, points, values) -> None:
+        if self._wal is None:
+            return
+        # prepare() validates without mutating, so nothing is logged for
+        # an insert that would raise — and a WAL failure below leaves the
+        # index untouched (the op is then applied by nobody).
+        pts, vals = self._lsm.prepare(points, values, self._dim)
+        if pts.shape[0] == 0:
+            return
+        arrays = {"points": pts}
+        if vals is not None:
+            arrays["values"] = vals
+        self._wal.append(op, arrays, {"next_id": int(self._lsm.next_id)})
+
+    def _wal_log_delete(self, ids) -> None:
+        if self._wal is None:
+            return
+        idn = np.atleast_1d(np.asarray(jax.device_get(ids))).astype(np.int64)
+        if idn.size == 0:
+            return
+        if (idn < 0).any() or (idn >= self._lsm.next_id).any():
+            bad = idn[(idn < 0) | (idn >= self._lsm.next_id)]
+            raise KeyError(f"unknown external ids: {bad[:8].tolist()}")
+        self._wal.append(
+            "delete", {"ids": idn.astype(np.int32)},
+            {"next_id": int(self._lsm.next_id)},
+        )
+
+
+class MutableHilbertIndex(WalFacade):
     """Streaming insert/delete/search over an LSM of Hilbert-forest segments.
 
     Typical lifecycle::
@@ -304,6 +394,7 @@ class MutableHilbertIndex:
         self._buf_count = 0
         self._lsm = LsmIdSpace()  # external ids / tombstones / values
         self._gen = 0
+        self._wal: Optional[wal_lib.WriteAheadLog] = None
 
     # -- LsmIdSpace shims (the historical attribute names, kept so segment
     # bookkeeping below and external pokes keep reading naturally) ----------
@@ -445,7 +536,13 @@ class MutableHilbertIndex:
         each buffer fill seals a segment, and tier merging keeps the segment
         count at most ``max_segments``.  ``values`` attaches one payload per
         point — either every insert carries values or none does.
+
+        With a WAL attached the insert is logged BEFORE any state changes
+        (log-then-apply): a crash at any later instant replays it, and a
+        failed log (:class:`repro.checkpoint.WalWriteError`) leaves the
+        index untouched — the insert was never acknowledged.
         """
+        self._wal_log_insert("insert", points, values)
         pts, ids = self._register(points, values)
         m = pts.shape[0]
         if m == 0:
@@ -474,6 +571,7 @@ class MutableHilbertIndex:
         ``HilbertIndex``), not ``n/buffer_capacity`` small ones.  Returns
         external ids like :meth:`insert`.
         """
+        self._wal_log_insert("bulk_load", points, values)
         if self._buf_count:
             self.flush()
         pts, ids = self._register(points, values)
@@ -490,29 +588,47 @@ class MutableHilbertIndex:
         (idempotent).  Rows are physically dropped at the next flush (buffer
         rows) or compaction touching their segment.
         """
+        self._wal_log_delete(ids)
         return self._lsm.delete(ids)
 
+    # -- write-ahead log: wal / enable_wal / detach_wal and the log-then-
+    # apply hooks come from WalFacade (shared with the sharded facade) ------
+
     def _segment_dead(self, seg: Segment) -> int:
-        """Tombstone count inside a segment, cached between deletes."""
+        """Tombstone count among a segment's REAL rows, cached between
+        deletes (pow2 padding duplicates are accounted separately)."""
         if seg.dead_epoch != self._delete_epoch:
-            seg.dead_cache = seg.n_points - int(
-                np.count_nonzero(self._alive[seg.ids])
+            seg.dead_cache = seg.n_real - int(
+                np.count_nonzero(self._alive[seg.ids[: seg.n_real]])
             )
             seg.dead_epoch = self._delete_epoch
         return seg.dead_cache
 
     # -- segment lifecycle ---------------------------------------------------
 
-    def _build_segment(self, pts: np.ndarray, ids: np.ndarray) -> Segment:
+    def _build_segment(self, pts: np.ndarray, ids: np.ndarray,
+                       *, pad: bool = False) -> Segment:
         # config.store_points is honored: True (the default) keeps raw fp32
         # points on each segment so compaction can re-sort them; False saves
         # that RAM for serving-only deployments at the cost of compaction
         # (tier merges skip point-less segments; compact() raises).
+        n_valid = int(pts.shape[0])
+        if pad and self.config.seal_pow2:
+            # Shape-stable seals: cyclically repeat real rows up to the
+            # next power of two.  Duplicates share their original's
+            # external id, so the merge dedups them; compact() and bulk
+            # loads never pad (pad=False) and stay bit-equal to a fresh
+            # build over the live rows.
+            target = _pow2_ceil(max(n_valid, 1))
+            if target > n_valid:
+                reps = -(-target // n_valid)
+                pts = np.tile(pts, (reps, 1))[:target]
+                ids = np.tile(ids, reps)[:target]
         with span("lsm.segment_build", rows=int(pts.shape[0])), \
                 dispatch_scope("lsm.segment_build"):
             index = HilbertIndex.build(jnp.asarray(pts), self.config)
         seg = Segment(index=index, ids=np.ascontiguousarray(ids, np.int32),
-                      gen=self._gen)
+                      gen=self._gen, n_valid=n_valid)
         self._gen += 1
         return seg
 
@@ -531,11 +647,12 @@ class MutableHilbertIndex:
         self._buf_count = 0
         if ids.size == 0:
             return None
-        seg = self._build_segment(pts, ids)
+        seg = self._build_segment(pts, ids, pad=True)
         self.segments.append(seg)
         return seg
 
-    def _merge_segments(self, to_merge: Sequence[Segment]) -> Optional[Segment]:
+    def _merge_segments(self, to_merge: Sequence[Segment],
+                        *, pad: bool = False) -> Optional[Segment]:
         """Replace ``to_merge`` with one segment; tombstoned rows vanish."""
         for seg in to_merge:
             if seg.index.points is None:
@@ -544,10 +661,13 @@ class MutableHilbertIndex:
                     "(IndexConfig(store_points=False), or a store_points="
                     "False index adopted via from_index)"
                 )
+        # Pow2 padding rows (duplicates past n_real) are excluded here, so
+        # merges — and in particular compact() — see exactly the real rows.
         pts = np.concatenate(
-            [np.asarray(seg.index.points, np.float32) for seg in to_merge]
+            [np.asarray(seg.index.points, np.float32)[: seg.n_real]
+             for seg in to_merge]
         )
-        ids = np.concatenate([seg.ids for seg in to_merge])
+        ids = np.concatenate([seg.ids[: seg.n_real] for seg in to_merge])
         live = self._alive[ids]
         pts, ids = pts[live], ids[live]
         # External-id order == insertion order: a full compaction therefore
@@ -557,7 +677,7 @@ class MutableHilbertIndex:
         self.segments = [s for s in self.segments if s not in to_merge]
         if ids.size == 0:
             return None
-        seg = self._build_segment(pts, ids)
+        seg = self._build_segment(pts, ids, pad=pad)
         self.segments.append(seg)
         return seg
 
@@ -569,7 +689,7 @@ class MutableHilbertIndex:
             if len(mergeable) < 2:
                 return
             smallest = sorted(mergeable, key=lambda s: s.n_points)[:2]
-            self._merge_segments(smallest)
+            self._merge_segments(smallest, pad=True)
 
     def compact(self) -> "MutableHilbertIndex":
         """Full compaction: flush, then merge ALL segments into one.
@@ -612,9 +732,13 @@ class MutableHilbertIndex:
         snap._lsm = self._lsm.clone()
         snap._gen = self._gen
         snap.segments = [
-            Segment(index=seg.index, ids=seg.ids, gen=seg.gen)
+            Segment(index=seg.index, ids=seg.ids, gen=seg.gen,
+                    n_valid=seg.n_valid)
             for seg in self.segments
         ]
+        # Deliberately NOT copied: the WAL.  A snapshot is the engine's
+        # shadow — replaying writes onto it must not re-log them; the live
+        # index's WAL transfers at swap time (see serve/engine.py).
         return snap
 
     def maintenance_stats(self) -> Dict[str, Any]:
@@ -679,17 +803,23 @@ class MutableHilbertIndex:
         parts_d: List[np.ndarray] = []
         for seg in list(self.segments):
             dead = self._segment_dead(seg)
-            if dead > max(cap - k, 0) and seg.index.points is not None:
+            # Pow2 padding duplicates each real row at most twice (pad <
+            # n_real by construction), so a padded segment needs 2x the
+            # candidate slots to guarantee the same count of DISTINCT live
+            # results; unpadded segments keep the historical k + dead.
+            need = (k + dead) * (2 if seg.n_pad else 1)
+            if dead > 0 and need > cap and seg.index.points is not None:
                 # So many tombstones that dead candidates could crowd live
                 # neighbors out of the stage-1/2 candidate pools (k can no
                 # longer be inflated past the pool size).  Read-triggered
                 # compaction: rewrite just this segment, dropping its dead
                 # rows for good, then search the clean replacement.
-                seg = self._merge_segments([seg])
+                seg = self._merge_segments([seg], pad=True)
                 if seg is None:  # segment was fully tombstoned
                     continue
                 dead = 0
-            k_seg = search_lib.inflate_k(k, dead, cap)
+                need = k * (2 if seg.n_pad else 1)
+            k_seg = search_lib.inflate_k(k, need - k, cap)
             sids, sd2 = seg.index.search(
                 q, dataclasses.replace(params, k=k_seg),
                 backend=backend, query_chunk=query_chunk,
@@ -836,25 +966,23 @@ def save_mutable_bundle(
                 seg_dir,
                 kind=_SEGMENT_KIND,
                 extra_arrays={"ids": jnp.asarray(seg.ids)},
-                extra_meta={"segment_uid": uid},
+                extra_meta={"segment_uid": uid, "n_valid": seg.n_real},
             )
         seg_names.append(name)
-    # Buffer state: live rows only (tombstoned buffer rows drop here, same
-    # as a flush would).
-    bids = index._buf_ids[: index._buf_count] if index._buf_count else (
-        np.zeros((0,), np.int32)
-    )
-    bmask = index._alive[bids] if bids.size else np.zeros((0,), np.bool_)
+    # Buffer state: the raw occupied slice, tombstoned rows included.
+    # Keeping dead rows makes load() reconstruct the in-memory state
+    # EXACTLY (same buffer occupancy, so later flush boundaries fall at
+    # the same ops) — the invariant WAL recovery's bit-equality rests on.
+    # Dead rows still drop for good at the next flush, as before.
     d = index._dim if index._dim is not None else 0
-    bpts = (
-        index._buf_points[: index._buf_count][bmask]
-        if bids.size
-        else np.zeros((0, d), np.float32)
-    )
+    bids = (index._buf_ids[: index._buf_count].copy()
+            if index._buf_count else np.zeros((0,), np.int32))
+    bpts = (index._buf_points[: index._buf_count].copy()
+            if index._buf_count else np.zeros((0, d), np.float32))
     state: Dict[str, np.ndarray] = {
         "alive": index._alive,
         "buffer_points": bpts,
-        "buffer_ids": bids[bmask] if bids.size else bids,
+        "buffer_ids": bids,
     }
     if index._values is not None:
         state["values"] = index._values
@@ -875,8 +1003,15 @@ def save_mutable_bundle(
         "segments": seg_names,
         "extra_meta": extra_meta or {},
     }
+    fault_point("mutable.save.pre_manifest", path=os.path.join(path, _MANIFEST))
     checkpoint.atomic_write_json(os.path.join(path, _MANIFEST), manifest)
     _prune_unreferenced(path, manifest, prev_manifest)
+    # The manifest now covers every acknowledged write: the WAL's records
+    # are redundant and the log restarts empty.  A crash BETWEEN the
+    # commit and this truncate only means records replay onto state that
+    # already contains them — their next_id watermarks make that a no-op.
+    if index._wal is not None:
+        index._wal.truncate()
     return path
 
 
@@ -920,7 +1055,9 @@ def _restore_state_bundle(path: str, step: Optional[int]
     for key, (_, dtype_str) in manifest["leaves"].items():
         abstract[key[2:-2]] = jax.ShapeDtypeStruct((0,), np.dtype(dtype_str))
     arrays, _ = checkpoint.restore(path, step, abstract)
-    return {k: np.asarray(jax.device_get(v)) for k, v in arrays.items()}
+    # np.array (not asarray): device_get hands back read-only views, and
+    # this state is mutated in place by post-restore deletes/WAL replay
+    return {k: np.array(jax.device_get(v)) for k, v in arrays.items()}
 
 
 def load_mutable_bundle(
@@ -943,7 +1080,7 @@ def load_mutable_bundle(
         max_segments=int(manifest["max_segments"]),
     )
     for name in manifest["segments"]:
-        seg_index, extras, _ = load_index_bundle(
+        seg_index, extras, seg_meta = load_index_bundle(
             os.path.join(path, "segments", name), kind=_SEGMENT_KIND
         )
         index.segments.append(
@@ -951,6 +1088,7 @@ def load_mutable_bundle(
                 index=seg_index,
                 ids=np.asarray(jax.device_get(extras["ids"]), np.int32),
                 gen=int(name.split("_")[1]),
+                n_valid=int(seg_meta.get("n_valid", -1)),
             )
         )
     state = _restore_state_bundle(
@@ -974,4 +1112,51 @@ def load_mutable_bundle(
             index._buf_points[:m] = bpts
             index._buf_ids[:m] = bids
         index._buf_count = m
+    _recover_wal(index, path)
     return index, manifest.get("extra_meta", {})
+
+
+def _recover_wal(index: MutableHilbertIndex, path: str) -> None:
+    """Replay + re-attach ``<path>/wal.log`` if the index was WAL-enabled.
+
+    Replays the acknowledged tail (everything since the manifest last
+    truncated the log) in original order on top of the restored state,
+    then re-attaches the log so durability stays on.  Records whose
+    ``next_id`` watermark the restored state already covers are skipped —
+    the crash-between-commit-and-truncate window.
+    """
+    wfile = wal_lib.wal_path(path)
+    if not os.path.exists(wfile):
+        return
+    records, wal = wal_lib.open_and_recover(wfile)
+    replay_wal_records(index, records)
+    index._wal = wal
+
+
+def replay_wal_records(index, records) -> int:
+    """Apply WAL records to a WAL-less index; returns ops applied.
+
+    Shared by both mutable facades (they expose the same insert/
+    bulk_load/delete and ``_lsm``).  The caller must not have a WAL
+    attached yet, or the replay would re-log itself.
+    """
+    if getattr(index, "_wal", None) is not None:
+        raise ValueError("detach the WAL before replaying records into it")
+    applied = 0
+    for rec in records:
+        if rec.op in ("insert", "bulk_load"):
+            wm = rec.meta.get("next_id")
+            if wm is not None and wm < index._lsm.next_id:
+                continue  # the restored checkpoint already contains it
+            vals = rec.arrays.get("values")
+            if rec.op == "bulk_load":
+                index.bulk_load(rec.arrays["points"], vals)
+            else:
+                index.insert(rec.arrays["points"], vals)
+        elif rec.op == "delete":
+            # Idempotent: re-deleting checkpoint-covered ids is a no-op.
+            index.delete(rec.arrays["ids"])
+        else:
+            raise wal_lib.WalError(f"unknown WAL op {rec.op!r}")
+        applied += 1
+    return applied

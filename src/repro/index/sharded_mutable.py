@@ -79,7 +79,14 @@ from repro.index.facade import (
     resolve_backend,
     save_index_bundle,
 )
-from repro.index.mutable import LsmIdSpace, _restore_state_bundle
+from repro.checkpoint import wal as wal_lib
+from repro.index.mutable import (
+    LsmIdSpace,
+    WalFacade,
+    _recover_wal,
+    _restore_state_bundle,
+)
+from repro.testing.faults import fault_point
 from repro.index.sharded import (
     ShardedHilbertIndex,
     ShardStack,
@@ -145,7 +152,7 @@ class ShardedSegment:
         return int(self.n_valid.sum())
 
 
-class ShardedMutableHilbertIndex:
+class ShardedMutableHilbertIndex(WalFacade):
     """Streaming insert/delete/search over a row-partitioned Hilbert forest.
 
     Typical lifecycle (requires a multi-device ``data`` mesh; on one device
@@ -214,6 +221,7 @@ class ShardedMutableHilbertIndex:
         self._alive_dev = None
         self._chunk_fns: Dict[tuple, object] = {}
         self.last_dispatch_count = 0
+        self._wal: Optional[wal_lib.WriteAheadLog] = None
 
     # -- introspection -------------------------------------------------------
 
@@ -479,6 +487,7 @@ class ShardedMutableHilbertIndex:
         at most ``max_segments``.  ``values`` attaches one payload per
         point — either every insert carries values or none does.
         """
+        self._wal_log_insert("insert", points, values)
         pts, ids = self._register(points, values)
         m = pts.shape[0]
         if m == 0:
@@ -515,6 +524,7 @@ class ShardedMutableHilbertIndex:
         existing partition bounds.  Returns external ids like
         :meth:`insert`.
         """
+        self._wal_log_insert("bulk_load", points, values)
         had_content = bool(self.segments) or self.n_buffered > 0
         pts, ids = self._register(points, values)
         if pts.shape[0] == 0:
@@ -540,6 +550,7 @@ class ShardedMutableHilbertIndex:
         physically dropped by the flush/merge/compaction that next touches
         their shard.
         """
+        self._wal_log_delete(ids)
         return self._lsm.delete(ids)
 
     # -- generation lifecycle ------------------------------------------------
@@ -547,6 +558,7 @@ class ShardedMutableHilbertIndex:
     def _seal(
         self, rows: Sequence[Tuple[np.ndarray, np.ndarray]],
         quant: Optional[quantize.Quantizer] = None,
+        *, pad: bool = False,
     ) -> Optional[ShardedSegment]:
         """Seal per-shard (ids, points) rows into one stacked generation.
 
@@ -555,11 +567,20 @@ class ShardedMutableHilbertIndex:
         duplicate ids collapse in the cross-shard merge.  ``quant`` (fit
         over the union when not given) is shared by every shard so
         in-generation cross-shard distances are mutually comparable.
+
+        With ``pad=True`` and ``config.seal_pow2`` the per-shard row count
+        rounds up to the next power of two instead of the exact max, so
+        steady-state churn recycles a handful of stack shapes and the
+        jitted dispatch stops recompiling once warm.  The extra rows are
+        more cyclic copies — ``pad_max`` grows, the existing per-
+        generation k inflation absorbs them, results stay exact.
         """
         n_valid = np.asarray([ids.size for ids, _ in rows], np.int64)
         if int(n_valid.sum()) == 0:
             return None
         n_pad = int(n_valid.max())
+        if pad and self.config.seal_pow2:
+            n_pad = _pow2_ceil(max(n_pad, 1))
         all_ids = np.concatenate([ids for ids, _ in rows])
         all_pts = np.concatenate([pts for _, pts in rows])
         j = int(np.argmin(all_ids))
@@ -627,7 +648,7 @@ class ShardedMutableHilbertIndex:
         self._buf_count[:] = 0
         self._buf_ids[:] = -1
         self._dev_buf = None
-        return self._seal(rows)
+        return self._seal(rows, pad=True)
 
     def _owned_rows(
         self, seg: ShardedSegment, s: int
@@ -664,7 +685,7 @@ class ShardedMutableHilbertIndex:
             order = np.argsort(ids_s, kind="stable")
             rows.append((ids_s[order], pts_s[order]))
         self.segments = [x for x in self.segments if x not in to_merge]
-        return self._seal(rows)
+        return self._seal(rows, pad=True)
 
     def _maybe_merge_tiers(self) -> None:
         while len(self.segments) > self.max_segments:
@@ -718,7 +739,9 @@ class ShardedMutableHilbertIndex:
         per-shard write buffers, routing bounds, and LSM bookkeeping are
         deep-copied.  The compiled-dispatch cache starts empty on the
         snapshot — the executables are keyed by LSM shape and re-resolve on
-        first search after a swap.
+        first search after a swap.  The WAL is deliberately NOT carried
+        over: the shadow must not re-log replayed mutations; the engine
+        transfers the log old→shadow at swap time.
         """
         snap = ShardedMutableHilbertIndex(
             config=self.config, mesh=self.mesh,
@@ -1076,8 +1099,11 @@ def save_sharded_mutable_bundle(
             "pad_max": int(seg.pad_max),
             "n_valid": [int(v) for v in seg.n_valid],
         })
-    # Sidecar: live buffer rows (+ shard assignment), tombstones, values,
-    # routing bounds — everything the stacked bundles don't carry.
+    # Sidecar: occupied buffer rows (+ shard assignment), tombstones,
+    # values, routing bounds — everything the stacked bundles don't carry.
+    # Tombstoned buffer rows are KEPT: load() must reconstruct the exact
+    # in-memory slot layout so WAL replay crosses the same flush
+    # boundaries the live process did (the bit-equal-recovery invariant).
     state: Dict[str, np.ndarray] = {"alive": index._lsm.alive}
     if index._lsm.values is not None:
         state["values"] = index._lsm.values
@@ -1086,11 +1112,9 @@ def save_sharded_mutable_bundle(
     if index._buf_count is not None:
         for s in range(s_count):
             c = int(index._buf_count[s])
-            ids_s = index._buf_ids[s, :c]
-            live = index._lsm.alive[ids_s]
-            bsh.append(np.full((int(live.sum()),), s, np.int32))
-            bid.append(ids_s[live])
-            bpt.append(index._buf_pts[s, :c][live])
+            bsh.append(np.full((c,), s, np.int32))
+            bid.append(index._buf_ids[s, :c].copy())
+            bpt.append(index._buf_pts[s, :c].copy())
     state["buffer_shard"] = (
         np.concatenate(bsh) if bsh else np.zeros((0,), np.int32)
     )
@@ -1123,6 +1147,10 @@ def save_sharded_mutable_bundle(
         "segments": seg_entries,
         "extra_meta": extra_meta or {},
     }
+    fault_point(
+        "sharded_mutable.save.pre_manifest",
+        path=os.path.join(path, _MANIFEST),
+    )
     checkpoint.atomic_write_json(os.path.join(path, _MANIFEST), manifest)
     keep = {e["name"] for e in manifest["segments"]} | {
         e["name"] for e in prev_manifest.get("segments", [])
@@ -1136,6 +1164,11 @@ def save_sharded_mutable_bundle(
     checkpoint.prune_steps(
         state_dir, {state_step, prev_manifest.get("state_step")}
     )
+    # The manifest is the commit point: every record logged before it is
+    # now covered by the checkpoint.  A crash in between just replays the
+    # covered tail as no-ops (next_id watermark).
+    if index._wal is not None:
+        index._wal.truncate()
     return path
 
 
@@ -1164,7 +1197,9 @@ def load_sharded_mutable_bundle(
                 f"{path!r}"
             )
         base = ShardedHilbertIndex.load(path, mesh=mesh)
-        return ShardedMutableHilbertIndex.from_sharded(base), {}
+        index = ShardedMutableHilbertIndex.from_sharded(base)
+        _recover_wal(index, path)
+        return index, {}
     with open(mpath) as f:
         manifest = json.load(f)
     if manifest.get("kind") != kind:
@@ -1205,6 +1240,7 @@ def load_sharded_mutable_bundle(
                 jnp.asarray(pts), index.config, mesh=mesh
             )
             index._adopt_base(base, ids)
+        _recover_wal(index, path)
         return index, manifest.get("extra_meta", {})
 
     index = ShardedMutableHilbertIndex(
@@ -1252,6 +1288,7 @@ def load_sharded_mutable_bundle(
             index._flips = jax.device_put(
                 shard_indexes[0].forest.flips, repl
             )
+    _recover_wal(index, path)
     return index, manifest.get("extra_meta", {})
 
 
@@ -1347,4 +1384,8 @@ def load_sharded_mutable_as_mutable(path: str, *, kind: str = _DEFAULT_KIND):
             ids=ids, gen=0,
         )]
         mut._gen = 1
+    # Acknowledged writes survive the degrade-to-one-device path too: the
+    # sharded WAL's records are layout-agnostic ops, so they replay into
+    # (and re-attach to) the single-device facade directly.
+    _recover_wal(mut, path)
     return mut

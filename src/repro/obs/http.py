@@ -6,7 +6,11 @@ process-global registry and tracer:
 * ``/metrics``      — Prometheus text exposition (scrape target);
 * ``/metrics.json`` — the registry's JSON snapshot;
 * ``/trace``        — Chrome-trace JSON of the tracer's span buffer
-  (load in ``chrome://tracing`` or Perfetto).
+  (load in ``chrome://tracing`` or Perfetto);
+* ``/healthz``      — readiness: 200 ``ok`` normally, 503 ``degraded``
+  while the serving engine is in degraded read-only mode (its WAL became
+  unwritable — the ``engine_degraded`` gauge).  Point the load
+  balancer's write-path health check here.
 
 Port 0 binds an ephemeral port; read it back from ``server.port``.
 Wired into ``launch/serve.py --metrics-port``; scraped by the CI
@@ -32,6 +36,19 @@ class _Handler(BaseHTTPRequestHandler):
 
     def do_GET(self):  # noqa: N802 (http.server API)
         path = self.path.split("?", 1)[0]
+        if path == "/healthz":
+            # Degraded = the engine refuses writes (WAL unwritable) but
+            # keeps serving reads; a dead/absent engine's callback gauge
+            # reads NaN and counts as healthy (nothing to protect).
+            v = self.registry.snapshot().get("engine_degraded", 0.0)
+            degraded = isinstance(v, (int, float)) and v == v and v > 0
+            body = b"degraded\n" if degraded else b"ok\n"
+            self.send_response(503 if degraded else 200)
+            self.send_header("Content-Type", "text/plain; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+            return
         if path == "/metrics":
             body = self.registry.prometheus_text().encode()
             ctype = "text/plain; version=0.0.4; charset=utf-8"

@@ -50,16 +50,21 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.checkpoint.wal import WalWriteError
 from repro.core.types import SearchParams
 from repro.obs.recall import RecallProbe, RecallProbeConfig
 from repro.obs.registry import default_registry
 from repro.obs.trace import span
 from repro.serve.metrics import EngineMetrics
 from repro.serve.pipeline import pipelined_search
+from repro.testing.faults import fault_point
 
 __all__ = [
+    "DeadlineExceeded",
     "EngineClosed",
+    "EngineDegraded",
     "MaintenancePolicy",
+    "MaintenanceTimeout",
     "QueueFull",
     "RetrievalEngine",
     "SearchTicket",
@@ -74,6 +79,32 @@ class EngineClosed(RuntimeError):
     """The engine stopped admitting requests (shutdown in progress/done)."""
 
 
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed while it waited in the queue.
+
+    Expired tickets are dropped at batch-formation time — BEFORE any
+    device dispatch — so a saturated deployment sheds stale work instead
+    of burning compute on answers nobody is waiting for anymore.
+    """
+
+
+class EngineDegraded(RuntimeError):
+    """Writes are refused: the engine is in degraded read-only mode.
+
+    Entered when the index's write-ahead log becomes unwritable
+    (:class:`~repro.checkpoint.wal.WalWriteError`): acknowledging writes
+    without a durable log would silently reintroduce the crash-loss
+    window, so writes fail fast with this error while searches keep
+    serving.  ``/healthz`` flips to 503 via the ``engine_degraded``
+    gauge; :meth:`RetrievalEngine.reset_degraded` re-admits writes after
+    the operator fixes the disk.
+    """
+
+
+class MaintenanceTimeout(RuntimeError):
+    """The shadow compact outran the watchdog; the shadow was abandoned."""
+
+
 @dataclasses.dataclass(frozen=True)
 class MaintenancePolicy:
     """When the background maintainer acts, and how often it looks.
@@ -83,11 +114,23 @@ class MaintenancePolicy:
     generation is an extra search stage — the ~8× p50 creep in
     ``BENCH_sharded_churn.json``), ``max_tombstone_ratio`` bounds wasted
     candidate-pool slots (each segment's k is inflated by its dead count).
+
+    ``max_cycle_s`` is the watchdog: a shadow ``compact()`` that has not
+    finished within it is abandoned (the serving index was never touched,
+    so nothing is lost but the shadow's work) and the cycle fails with
+    :class:`MaintenanceTimeout`.  The maintainer thread then backs off
+    exponentially from ``backoff_initial_s`` doubling to at most
+    ``backoff_max_s`` between failed cycles, so a persistently failing
+    compact (bad disk, poisoned segment) cannot hot-loop the maintainer
+    while serving continues.
     """
 
     max_segments: int = 4          # sealed segments/generations before compact
     max_tombstone_ratio: float = 0.25  # dead/allocated ids before compact
     poll_interval_s: float = 0.05  # maintainer wake period
+    max_cycle_s: Optional[float] = 300.0  # shadow-compact watchdog (None=off)
+    backoff_initial_s: float = 0.25      # first post-failure delay
+    backoff_max_s: float = 30.0          # backoff cap
 
     def triggered(self, stats: Dict[str, Any]) -> bool:
         if stats.get("n_live", 0) == 0:
@@ -109,11 +152,18 @@ class SearchTicket:
     ``search`` on THAT version.  The lifecycle timestamps split a
     request's latency into its operational phases: ``submitted_at`` →
     ``batched_at`` (queue wait) → ``completed_at`` (execution + merge).
+
+    ``deadline`` (a ``time.monotonic()`` instant, or None) marks when the
+    caller stops caring: a ticket still queued past it is failed with
+    :class:`DeadlineExceeded` at batch-formation time instead of being
+    dispatched.
     """
 
-    def __init__(self, queries: np.ndarray, params: SearchParams):
+    def __init__(self, queries: np.ndarray, params: SearchParams,
+                 deadline: Optional[float] = None):
         self.queries = queries
         self.params = params
+        self.deadline = deadline
         self.submitted_at = time.perf_counter()
         self.batched_at: Optional[float] = None
         self.completed_at: Optional[float] = None
@@ -126,6 +176,10 @@ class SearchTicket:
     @property
     def done(self) -> bool:
         return self._done.is_set()
+
+    @property
+    def expired(self) -> bool:
+        return self.deadline is not None and time.monotonic() > self.deadline
 
     @property
     def latency_ms(self) -> Optional[float]:
@@ -238,11 +292,17 @@ class RetrievalEngine:
         pipeline: bool = True,
         maintenance: Optional[MaintenancePolicy] = MaintenancePolicy(),
         recall: Optional[Any] = None,
+        default_deadline_ms: Optional[float] = None,
         start: bool = False,
     ):
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if default_deadline_ms is not None and default_deadline_ms <= 0:
+            raise ValueError(
+                f"default_deadline_ms must be > 0, got {default_deadline_ms}"
+            )
         self.params = params or SearchParams()
+        self.default_deadline_ms = default_deadline_ms
         self.backend = backend
         self.pipeline = pipeline
         self.max_queue = int(max_queue)
@@ -279,6 +339,7 @@ class RetrievalEngine:
         self._maintainer: Optional[threading.Thread] = None
         self._stop_event = threading.Event()
         self.last_maintenance_error: Optional[BaseException] = None
+        self._degraded_reason: Optional[str] = None
         if start:
             self.start()
 
@@ -326,6 +387,10 @@ class RetrievalEngine:
             return float(eng.maintenance_stats().get("n_buffered", 0)) / cap
 
         reg.gauge("engine_buffer_fill", fn=buffer_fill)
+        reg.gauge(
+            "engine_degraded",
+            fn=attr(lambda e: 1.0 if e._degraded_reason else 0.0),
+        )
 
     # -- introspection -------------------------------------------------------
 
@@ -350,6 +415,28 @@ class RetrievalEngine:
     def running(self) -> bool:
         return self._worker is not None and self._worker.is_alive()
 
+    @property
+    def degraded(self) -> bool:
+        """True when writes are refused (WAL unwritable); reads still serve."""
+        return self._degraded_reason is not None
+
+    @property
+    def degraded_reason(self) -> Optional[str]:
+        return self._degraded_reason
+
+    def reset_degraded(self) -> None:
+        """Re-admit writes after the operator has fixed the WAL's disk.
+
+        The next write that fails to log re-enters degraded mode, so
+        resetting without fixing the underlying fault is safe — just
+        noisy.
+        """
+        self._degraded_reason = None
+
+    def _enter_degraded(self, reason: str) -> None:
+        self._degraded_reason = reason
+        self.metrics.bump("degraded_entered")
+
     # -- admission -----------------------------------------------------------
 
     def submit(
@@ -359,6 +446,7 @@ class RetrievalEngine:
         *,
         block: bool = True,
         timeout: Optional[float] = None,
+        deadline_ms: Optional[float] = None,
     ) -> SearchTicket:
         """Admit one request ((m, d) queries) into the bounded queue.
 
@@ -366,11 +454,23 @@ class RetrievalEngine:
         :class:`QueueFull` instead of waiting for space, and a closed
         engine raises :class:`EngineClosed` (both count as rejections in
         the metrics).
+
+        ``deadline_ms`` (default: the engine's ``default_deadline_ms``)
+        bounds how long the ticket may WAIT: if it is still queued when
+        the deadline passes it fails with :class:`DeadlineExceeded`
+        instead of being dispatched.  A batch already executing is never
+        aborted — the deadline sheds queue backlog, not in-flight work.
         """
         q = np.asarray(jax.device_get(queries), np.float32)
         if q.ndim == 1:
             q = q[None, :]
-        ticket = SearchTicket(q, params or self.params)
+        if deadline_ms is None:
+            deadline_ms = self.default_deadline_ms
+        req_deadline = (
+            None if deadline_ms is None
+            else time.monotonic() + deadline_ms / 1000.0
+        )
+        ticket = SearchTicket(q, params or self.params, deadline=req_deadline)
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
             while True:
@@ -432,6 +532,10 @@ class RetrievalEngine:
         While a shadow compaction is in flight the write is ALSO appended
         to the replay log: id assignment is sequential, so replaying the
         log on the shadow reproduces identical external ids.
+
+        Raises :class:`EngineDegraded` (fast, before touching the index)
+        when the engine is in degraded read-only mode, and ENTERS that
+        mode if this write's WAL append fails.
         """
         with self._serve_lock:
             index = self.index
@@ -440,12 +544,19 @@ class RetrievalEngine:
                     f"{type(index).__name__} is immutable — the engine "
                     "serves it read-only"
                 )
+            self._check_writable()
             pts = np.asarray(jax.device_get(points), np.float32)
             vals = (
                 None if values is None
                 else np.asarray(jax.device_get(values)).copy()
             )
-            ids = index.insert(pts, vals)
+            try:
+                ids = index.insert(pts, vals)
+            except WalWriteError as e:
+                self._enter_degraded(str(e))
+                raise EngineDegraded(
+                    f"write-ahead log unwritable, write refused: {e}"
+                ) from e
             with self._state_lock:
                 if self._write_log is not None:
                     self._write_log.append(("insert", pts.copy(), vals))
@@ -461,13 +572,28 @@ class RetrievalEngine:
                     f"{type(index).__name__} is immutable — the engine "
                     "serves it read-only"
                 )
+            self._check_writable()
             idn = np.asarray(jax.device_get(ids)).copy()
-            n = index.delete(idn)
+            try:
+                n = index.delete(idn)
+            except WalWriteError as e:
+                self._enter_degraded(str(e))
+                raise EngineDegraded(
+                    f"write-ahead log unwritable, write refused: {e}"
+                ) from e
             with self._state_lock:
                 if self._write_log is not None:
                     self._write_log.append(("delete", idn, None))
             self.metrics.bump("deletes", int(n))
             return n
+
+    def _check_writable(self) -> None:
+        if self._degraded_reason is not None:
+            self.metrics.bump("writes_rejected_degraded")
+            raise EngineDegraded(
+                "engine is in degraded read-only mode: "
+                + self._degraded_reason
+            )
 
     def values_at(self, ids, fill=0):
         """Per-point payload gather on the serving index (kNN-LM tokens)."""
@@ -487,6 +613,13 @@ class RetrievalEngine:
         rows = 0
         while self._pending:
             nxt = self._pending[0]
+            if nxt.expired:
+                # dropped BEFORE dispatch: stale work is shed, not served
+                self._pending.popleft()._fail(DeadlineExceeded(
+                    "request deadline passed while queued"
+                ))
+                self.metrics.bump("deadline_expired")
+                continue
             if batch and (
                 nxt.params != batch[0].params
                 or rows + nxt.queries.shape[0] > self.max_batch
@@ -667,16 +800,17 @@ class RetrievalEngine:
                     self._write_log = []
             clock("snapshot", t0)
             self.metrics.bump("maintenance_runs")
+            fault_point("engine.maint.pre_compact")
             t0 = time.perf_counter()
             try:
-                with span("maint.compact",
-                          segments=int(stats.get("n_segments", 0))):
-                    shadow.compact()  # off the query path: serving continues
+                self._compact_shadow(shadow, policy,
+                                     int(stats.get("n_segments", 0)))
             except BaseException:
                 with self._state_lock:
                     self._write_log = None
                 raise
             clock("compact", t0)
+            fault_point("engine.maint.post_compact")
 
             def apply(log):
                 for op, a, b in log:
@@ -698,6 +832,7 @@ class RetrievalEngine:
             # lock.  Any failure abandons the shadow AND closes the replay
             # log, else the write path keeps copying into a log nobody
             # will drain.
+            fault_point("engine.maint.pre_replay")
             replay_ms = prewarm_ms = 0.0
             try:
                 for _ in range(4):
@@ -728,10 +863,21 @@ class RetrievalEngine:
                 timeline["log_depth"] += len(log)
                 timeline["tail_ops"] = len(log)
                 apply(log)
+                # Transfer the WAL old -> shadow: the shadow deliberately
+                # snapshots WITHOUT one (replay must not re-log), and
+                # every op applied to it was logged when the old index
+                # acknowledged it — the log is exactly as durable for the
+                # shadow as it was for the index it replaces.
+                if hasattr(index, "detach_wal"):
+                    w = index.detach_wal()
+                    if w is not None:
+                        shadow._wal = w
+                fault_point("engine.maint.pre_swap")
                 with self._state_lock:
                     old = self._current
                     self._current = _Epoch(shadow, old.epoch + 1)
                 self.metrics.bump("swaps")
+                fault_point("engine.maint.post_swap")
             clock("swap", t0)
             timeline["replay_ms"] = replay_ms
             timeline["prewarm_ms"] = prewarm_ms
@@ -753,6 +899,42 @@ class RetrievalEngine:
         finally:
             cycle.__exit__(None, None, None)
 
+    def _compact_shadow(self, shadow, policy: MaintenancePolicy,
+                        n_segments: int) -> None:
+        """Run ``shadow.compact()`` under the ``max_cycle_s`` watchdog.
+
+        The compact runs on a helper thread so a hang (wedged device,
+        pathological merge) can be ABANDONED: the serving index was never
+        touched, so dropping the shadow loses nothing but the cycle's
+        work.  The orphaned thread finishes (or hangs) against an object
+        nobody references anymore.  ``max_cycle_s=None`` compacts inline.
+        """
+        budget = policy.max_cycle_s
+        with span("maint.compact", segments=n_segments):
+            if budget is None:
+                shadow.compact()
+                return
+            err: List[BaseException] = []
+
+            def run() -> None:
+                try:
+                    shadow.compact()
+                except BaseException as e:
+                    err.append(e)
+
+            th = threading.Thread(
+                target=run, name="maint-compact", daemon=True
+            )
+            th.start()
+            th.join(budget)
+            if th.is_alive():
+                self.metrics.bump("maintenance_timeouts")
+                raise MaintenanceTimeout(
+                    f"shadow compact exceeded {budget}s; shadow abandoned"
+                )
+            if err:
+                raise err[0]
+
     def score_recall(self) -> int:
         """Score pending recall-probe batches (exact shadow, host math).
 
@@ -768,15 +950,30 @@ class RetrievalEngine:
 
     def _maintenance_loop(self) -> None:
         policy = self.maintenance or MaintenancePolicy()
+        backoff_gauge = default_registry().gauge("engine_maint_backoff_s")
+        failures = 0
         while not self._stop_event.wait(policy.poll_interval_s):
             try:
                 if self.maintenance is not None:
                     self.maintain_once()
                 self.score_recall()
+                failures = 0
+                backoff_gauge.set(0.0)
             except BaseException as e:
                 # maintenance must never take serving down; surface the
-                # error for operators/tests and keep the loop alive.
+                # error for operators/tests, back off (capped exponential
+                # — a persistently failing compact can't hot-loop the
+                # maintainer), and keep the loop alive.
                 self.last_maintenance_error = e
+                self.metrics.bump("maintenance_failures")
+                failures += 1
+                delay = min(
+                    policy.backoff_max_s,
+                    policy.backoff_initial_s * (2 ** (failures - 1)),
+                )
+                backoff_gauge.set(delay)
+                if self._stop_event.wait(delay):
+                    return
 
     # -- lifecycle -----------------------------------------------------------
 

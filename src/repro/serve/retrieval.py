@@ -228,6 +228,22 @@ class RetrievalStore:
             return self.engine.delete(ids)
         return self._impl.delete(ids)
 
+    def enable_wal(self, path: str, config=None) -> "RetrievalStore":
+        """Make acknowledged writes durable: attach a write-ahead log.
+
+        ``path`` is the checkpoint directory this store saves to.  Every
+        :meth:`append`/:meth:`delete` is framed + logged BEFORE it is
+        applied (fsync batched per the
+        :class:`~repro.checkpoint.wal.WalConfig` group-commit policy);
+        :meth:`save` truncates the log at its commit point, and
+        :meth:`load` replays any tail automatically — a crash at any
+        instant recovers bit-equal to never having crashed.  With a
+        serving engine attached, a WAL write failure flips the engine
+        into degraded read-only mode instead of losing writes silently.
+        """
+        self._impl.enable_wal(path, config)
+        return self
+
     def compact(self) -> "RetrievalStore":
         """Merge segments / drop tombstones (e.g. in a maintenance window).
 

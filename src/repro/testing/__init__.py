@@ -1,0 +1,14 @@
+"""Deterministic fault injection for durability testing.
+
+See :mod:`repro.testing.faults` for the injection-point API and
+``docs/DURABILITY.md`` for the catalog of registered points.
+"""
+
+from .faults import (  # noqa: F401
+    FaultInjected,
+    fault_point,
+    install_plan,
+    parse_plan,
+    registered_points,
+    reset,
+)

@@ -1,0 +1,402 @@
+"""Fault-tolerance tier-1 tests: WAL framing, self-verifying checkpoints,
+the fault-injection harness, bit-equal crash recovery, and the engine's
+degraded/deadline behavior.  The exhaustive subprocess crash matrix lives
+in ``scripts/crash_check.py`` (CI fault-tolerance job); this module keeps
+a representative kill subset plus the in-process invariants."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro import checkpoint
+from repro.checkpoint import WalConfig
+from repro.checkpoint import wal as wal_lib
+from repro.core.types import ForestConfig, SearchParams
+from repro.index import IndexConfig, MutableHilbertIndex
+from repro.testing import faults
+
+FCFG = ForestConfig(n_trees=4, bits=4, key_bits=32, leaf_size=16)
+CFG = IndexConfig(forest=FCFG)
+PARAMS = SearchParams(k1=16, k2=32, h=1, k=8)
+DIM = 8
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CRASH_CHECK = os.path.join(REPO, "scripts", "crash_check.py")
+
+
+def _rows(seed, m):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(m, DIM)).astype(np.float32),
+            rng.integers(0, 100, size=(m,)).astype(np.int32))
+
+
+@pytest.fixture(autouse=True)
+def _no_fault_plan():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+# ---------------------------------------------------------------- framing
+
+
+def test_wal_roundtrip(tmp_path):
+    path = str(tmp_path / "wal.log")
+    w = wal_lib.WriteAheadLog(path, WalConfig(sync_every=2))
+    pts, vals = _rows(0, 5)
+    s1 = w.append("insert", {"points": pts, "values": vals}, {"next_id": 0})
+    s2 = w.append("delete", {"ids": np.arange(3, dtype=np.int32)},
+                  {"next_id": 5})
+    w.close()
+    records, _, torn = wal_lib.read_records(path)
+    assert not torn and [r.seq for r in records] == [s1, s2]
+    assert records[0].op == "insert" and records[1].op == "delete"
+    np.testing.assert_array_equal(records[0].arrays["points"], pts)
+    np.testing.assert_array_equal(records[0].arrays["values"], vals)
+    assert records[0].meta == {"next_id": 0}
+    assert records[1].meta == {"next_id": 5}
+
+
+def _one_record_file(tmp_path) -> str:
+    path = str(tmp_path / "wal.log")
+    w = wal_lib.WriteAheadLog(path)
+    pts, vals = _rows(1, 4)
+    w.append("insert", {"points": pts, "values": vals}, {"next_id": 0})
+    w.close()
+    return path
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_wal_any_single_bitflip_rejected(tmp_path_factory, data):
+    """CRC framing rejects a flip of ANY single bit — including the seq
+    field (covered by seeding the CRC with it)."""
+    tmp_path = tmp_path_factory.mktemp("wal_flip")
+    path = _one_record_file(tmp_path)
+    size = os.path.getsize(path)
+    bit = data.draw(st.integers(min_value=0, max_value=size * 8 - 1))
+    with open(path, "r+b") as f:
+        f.seek(bit // 8)
+        b = f.read(1)
+        f.seek(bit // 8)
+        f.write(bytes([b[0] ^ (1 << (bit % 8))]))
+    try:
+        records, _, torn = wal_lib.read_records(path)
+    except wal_lib.WalError:
+        return                                # flip landed in the magic
+    assert records == [] and torn
+
+
+def test_wal_bitflip_rejected_fixed_positions(tmp_path):
+    """Non-hypothesis smoke of the same property at a few offsets."""
+    for frac in (0.1, 0.3, 0.5, 0.9):
+        path = _one_record_file(tmp_path)
+        size = os.path.getsize(path)
+        pos = max(8, min(size - 1, int(frac * size)))  # past the magic
+        with open(path, "r+b") as f:
+            f.seek(pos)
+            b = f.read(1)
+            f.seek(pos)
+            f.write(bytes([b[0] ^ 0x01]))
+        records, _, torn = wal_lib.read_records(path)
+        assert records == [] and torn
+        os.remove(path)
+
+
+def test_wal_torn_tail_truncated_and_seq_continues(tmp_path):
+    path = str(tmp_path / "wal.log")
+    w = wal_lib.WriteAheadLog(path)
+    pts, vals = _rows(2, 3)
+    w.append("insert", {"points": pts}, {"next_id": 0})
+    s2 = w.append("insert", {"points": pts}, {"next_id": 3})
+    w.close()
+    good = os.path.getsize(path)
+    with open(path, "ab") as f:
+        f.write(b"\xff\x00\x00\x00torn-partial-frame")
+    records, wal = wal_lib.open_and_recover(path)
+    assert [r.seq for r in records] == [s2 - 1, s2]
+    assert os.path.getsize(path) == good      # torn tail truncated
+    s3 = wal.append("delete", {"ids": np.zeros(1, np.int32)}, {"next_id": 6})
+    wal.close()
+    assert s3 == s2 + 1                       # numbering continues
+
+
+# ----------------------------------------------------- checkpoint digests
+
+
+def test_checkpoint_bitflip_detected_quarantined_fallback(tmp_path):
+    ckpt = str(tmp_path / "bundle")
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.normal(size=(64, 32)).astype(np.float32)}
+    checkpoint.save(ckpt, step=0, tree=tree, extra={})
+    checkpoint.save(ckpt, step=1, tree=tree, extra={})
+    assert checkpoint.verify_step(ckpt, 1) == []
+    npz = os.path.join(ckpt, "step_00000001", "host0.npz")
+    size = os.path.getsize(npz)
+    with open(npz, "r+b") as f:
+        f.seek(size // 2)
+        b = f.read(1)
+        f.seek(size // 2)
+        f.write(bytes([b[0] ^ 0x04]))
+    assert checkpoint.verify_step(ckpt, 1)    # detected
+    with pytest.raises(checkpoint.CorruptBundleError):
+        checkpoint.restore(ckpt, 1, tree)
+    # restore quarantined the rotten bundle; resolution falls back
+    assert checkpoint.latest_step(ckpt) == 0
+    assert checkpoint.latest_verifiable_step(ckpt) == 0
+    assert os.path.isdir(
+        os.path.join(ckpt, "step_00000001.quarantine")
+    )
+    restored, _ = checkpoint.restore(ckpt, 0, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), tree["w"])
+
+
+# ------------------------------------------------------------ fault plans
+
+
+def test_fault_plan_parse_and_raise(tmp_path):
+    plan = faults.parse_plan("a.b@3=kill; c.d=raise;e.f=torn:7;g=bitflip")
+    assert plan == {"a.b": (3, "kill"), "c.d": (1, "raise"),
+                    "e.f": (1, "torn:7"), "g": (1, "bitflip")}
+    with pytest.raises(ValueError):
+        faults.parse_plan("x=explode")
+    trace = str(tmp_path / "trace.txt")
+    faults.install_plan({"p.q": (2, "raise")}, trace_path=trace)
+    faults.fault_point("p.q")                 # hit 1: armed for hit 2
+    with pytest.raises(faults.FaultInjected):
+        faults.fault_point("p.q")
+    faults.reset()
+    faults.fault_point("p.q")                 # disarmed: no-op
+    with open(trace) as f:
+        assert f.read().splitlines() == ["p.q", "p.q"]
+    assert faults.registered_points() == {}
+
+
+# --------------------------------------------- WAL recovery (in-process)
+
+
+def _churned_index(path, *, save_midway=True):
+    idx = MutableHilbertIndex(CFG, buffer_capacity=16, max_segments=4)
+    idx.enable_wal(path, WalConfig(sync_every=4))
+    pts, vals = _rows(10, 40)
+    idx.insert(pts, vals)
+    idx.delete(np.asarray([1, 17, 33], np.int32))
+    if save_midway:
+        idx.save(path)
+    pts2, vals2 = _rows(11, 21)
+    idx.insert(pts2, vals2)
+    idx.delete(np.asarray([0, 45], np.int32))
+    return idx
+
+
+def test_mutable_wal_recovery_bit_equal(tmp_path):
+    """Reload after an unflushed tail == the index that never went down."""
+    path = str(tmp_path / "ckpt")
+    live = _churned_index(path)
+    live.wal.sync()
+    rec = MutableHilbertIndex.load(path)
+    assert rec._lsm.next_id == live._lsm.next_id
+    np.testing.assert_array_equal(rec._lsm.alive, live._lsm.alive)
+    np.testing.assert_array_equal(rec._lsm.values, live._lsm.values)
+    q = np.random.default_rng(3).normal(size=(8, DIM)).astype(np.float32)
+    ids_a, d_a = (np.asarray(x) for x in live.search(q, PARAMS))
+    ids_b, d_b = (np.asarray(x) for x in rec.search(q, PARAMS))
+    np.testing.assert_array_equal(ids_a, ids_b)
+    assert d_a.tobytes() == d_b.tobytes()
+
+
+def test_save_truncates_wal_and_load_recovers_writes_after(tmp_path):
+    path = str(tmp_path / "ckpt")
+    idx = _churned_index(path, save_midway=False)
+    idx.save(path)
+    records, _, _ = wal_lib.read_records(wal_lib.wal_path(path))
+    assert records == []                      # truncated at the commit point
+    pts, vals = _rows(12, 5)
+    idx.insert(pts, vals)                     # post-save tail
+    rec = MutableHilbertIndex.load(path)
+    assert rec._lsm.next_id == idx._lsm.next_id
+
+
+def test_mutations_after_load_work(tmp_path):
+    """Regression: restored state must be writable (device_get hands back
+    read-only views) — post-restore deletes/replays mutate it in place."""
+    path = str(tmp_path / "ckpt")
+    idx = MutableHilbertIndex(CFG, buffer_capacity=16)
+    pts, vals = _rows(13, 30)
+    idx.insert(pts, vals)
+    idx.save(path)
+    rec = MutableHilbertIndex.load(path)
+    assert rec.delete(np.asarray([4, 9], np.int32)) == 2
+    rec.insert(*_rows(14, 3))
+
+
+def test_degrade_sharded_to_mutable_replays_wal(tmp_path):
+    import jax
+
+    from repro.index import (
+        ShardedMutableHilbertIndex,
+        load_sharded_mutable_as_mutable,
+    )
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices (sharded facade)")
+    path = str(tmp_path / "ckpt")
+    pts, vals = _rows(15, 64)
+    idx = ShardedMutableHilbertIndex.build(
+        pts, CFG, values=vals, buffer_capacity=8, max_segments=4
+    )
+    idx.enable_wal(path, WalConfig(sync_every=1))
+    idx.save(path)
+    idx.insert(*_rows(16, 5))                 # unflushed WAL tail
+    mut = load_sharded_mutable_as_mutable(path)
+    assert mut._lsm.next_id == idx._lsm.next_id
+    np.testing.assert_array_equal(mut._lsm.values, idx._lsm.values)
+
+
+# ------------------------------------------------------------- pow2 seals
+
+
+def test_seal_pow2_pads_flush_and_compact_unpads():
+    cfg = IndexConfig(forest=FCFG, seal_pow2=True)
+    idx = MutableHilbertIndex(cfg, buffer_capacity=24, max_segments=8)
+    pts, vals = _rows(20, 24)                 # one exact flush of 24 rows
+    ids = idx.insert(pts, vals)
+    seg = idx.segments[0]
+    assert seg.n_real == 24 and seg.n_points == 32       # pow2-padded
+    q = pts[:6]
+    got, _ = idx.search(q, PARAMS)
+    got = np.asarray(got)
+    assert (got[:, 0] == ids[:6]).all()       # self-NN despite padding
+    for row in got:                           # padding never duplicates ids
+        valid = row[row >= 0]
+        assert len(set(valid.tolist())) == len(valid)
+    idx.compact()
+    assert idx.segments[0].n_pad == 0         # compaction builds exact
+
+
+# ----------------------------------------------------- engine resilience
+
+
+def test_engine_deadline_expired_dropped_before_dispatch():
+    import time
+
+    from repro.serve.engine import DeadlineExceeded, RetrievalEngine
+
+    idx = MutableHilbertIndex(CFG, buffer_capacity=32)
+    idx.insert(*_rows(21, 20))
+    eng = RetrievalEngine(idx, PARAMS, maintenance=None, start=False)
+    q = np.random.default_rng(5).normal(size=(4, DIM)).astype(np.float32)
+    ticket = eng.submit(q, deadline_ms=1.0)
+    time.sleep(0.02)
+    assert eng.step() == 0                    # expired: nothing dispatched
+    with pytest.raises(DeadlineExceeded):
+        ticket.result(timeout=0)
+    assert eng.metrics.snapshot()["counters"]["deadline_expired"] == 1
+    ok = eng.submit(q)                        # no deadline: serves normally
+    assert eng.step() == 1 and ok.result(0)[0].shape == (4, PARAMS.k)
+
+
+def test_engine_enters_degraded_on_wal_failure(tmp_path):
+    from repro.serve.engine import EngineDegraded, RetrievalEngine
+
+    idx = MutableHilbertIndex(CFG, buffer_capacity=32)
+    idx.enable_wal(str(tmp_path / "ckpt"), WalConfig(sync_every=1))
+    idx.insert(*_rows(22, 20))
+    eng = RetrievalEngine(idx, PARAMS, maintenance=None, start=False)
+    faults.install_plan({"wal.append.pre_write": (1, "raise")})
+    with pytest.raises(EngineDegraded):
+        eng.insert(*_rows(23, 4))
+    faults.reset()
+    assert eng.degraded and "fault injected" in eng.degraded_reason
+    with pytest.raises(EngineDegraded):       # fail-fast, no index touch
+        eng.delete(np.asarray([0], np.int32))
+    q = np.random.default_rng(6).normal(size=(2, DIM)).astype(np.float32)
+    ids, _ = eng.search(q)                    # reads keep serving
+    assert ids.shape == (2, PARAMS.k)
+    eng.reset_degraded()
+    eng.insert(*_rows(23, 4))                 # healthy again
+    c = eng.metrics.snapshot()["counters"]
+    assert c["degraded_entered"] == 1 and c["writes_rejected_degraded"] == 1
+
+
+# ------------------------------------------- subprocess crash-kill subset
+
+
+def _crash_env(**extra):
+    env = dict(os.environ)
+    env.pop("REPRO_FAULTS", None)
+    env.pop("REPRO_FAULT_TRACE", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    env.update(extra)
+    return env
+
+
+@pytest.mark.parametrize("point,hit", [
+    ("wal.append.post_write", 5),   # mid-stream append, record in flight
+    ("ckpt.json.pre_rename", 1),    # first manifest commit torn away
+    ("wal.truncate.pre", 1),        # between commit and WAL truncate
+])
+def test_crash_kill_then_bit_equal_recovery(tmp_path, point, hit):
+    """SIGKILL the workload child at a registered fault point; a fresh
+    process must recover bit-equal with zero acknowledged-write loss
+    (full matrix: ``scripts/crash_check.py``)."""
+    wd = str(tmp_path / "crash")
+    os.makedirs(wd)
+    cmd = [sys.executable, CRASH_CHECK, "--child", "run",
+           "--scenario", "mutable", "--workdir", wd]
+    r = subprocess.run(
+        cmd, env=_crash_env(REPRO_FAULTS=f"{point}@{hit}=kill"),
+        capture_output=True, text=True, timeout=300,
+    )
+    assert r.returncode == -signal.SIGKILL, r.stdout + r.stderr
+    v = subprocess.run(
+        [sys.executable, CRASH_CHECK, "--child", "verify",
+         "--scenario", "mutable", "--workdir", wd],
+        env=_crash_env(), capture_output=True, text=True, timeout=300,
+    )
+    assert v.returncode == 0, v.stdout + v.stderr
+    assert "VERIFIED" in v.stdout
+
+
+def test_crash_kill_sharded_recovery(tmp_path):
+    wd = str(tmp_path / "crash")
+    os.makedirs(wd)
+    env = _crash_env(
+        REPRO_FAULTS="wal.append.post_write@3=kill",
+        XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                   + " --xla_force_host_platform_device_count=8").strip(),
+    )
+    cmd = [sys.executable, CRASH_CHECK, "--child", "run",
+           "--scenario", "sharded", "--workdir", wd]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=300)
+    assert r.returncode == -signal.SIGKILL, r.stdout + r.stderr
+    env.pop("REPRO_FAULTS")
+    v = subprocess.run(
+        [sys.executable, CRASH_CHECK, "--child", "verify",
+         "--scenario", "sharded", "--workdir", wd],
+        env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert v.returncode == 0, v.stdout + v.stderr
+    assert "VERIFIED" in v.stdout
+
+
+def test_acks_ledger_written_fsynced(tmp_path):
+    """The battery's zero-loss argument rests on the ack ledger being
+    durable before the next op; sanity-check the helper used there."""
+    sys.path.insert(0, os.path.dirname(CRASH_CHECK))
+    try:
+        import crash_check
+    finally:
+        sys.path.pop(0)
+    path = str(tmp_path / "acks.jsonl")
+    crash_check._ack(path, 0)
+    crash_check._ack(path, 1)
+    with open(path) as f:
+        assert [json.loads(x)["i"] for x in f] == [0, 1]
