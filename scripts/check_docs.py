@@ -1,8 +1,9 @@
-"""Docs checker: code blocks must parse, doctests must pass, links resolve.
+"""Docs checker: code blocks parse, doctests pass, links + bench claims hold.
 
-Run: python scripts/check_docs.py [files...]   (default: README.md docs/*.md)
+Run: python scripts/check_docs.py [files...]
+(default: README.md ROADMAP.md docs/*.md)
 
-Three checks over every markdown file:
+Four checks over every markdown file:
 
 1. **Python code blocks compile** — every ```python fence must be valid
    syntax (illustrative blocks may reference undefined names; they still
@@ -13,6 +14,13 @@ Three checks over every markdown file:
 3. **Links and anchors resolve** — every relative markdown link must point
    at an existing file, and every ``#fragment`` (same-file or cross-file)
    must match a heading's GitHub-style anchor slug.
+4. **Bench claims match the artifacts** — any paragraph that names a
+   committed ``BENCH_*.json`` must only quote ``NNN ms`` figures that
+   actually appear in that artifact (within rounding).  Latency numbers
+   pasted into prose rot silently when the benchmark reruns — this check
+   is how the 577ms-vs-964ms drift that motivated it gets caught at CI
+   time.  A paragraph can opt out with ``<!-- bench-claims: ignore -->``
+   (e.g. when quoting a historical value on purpose).
 
 Exit status is non-zero with a per-problem report on any failure; also run
 in-process by ``tests/test_docs.py`` so the tier-1 suite catches doc rot.
@@ -22,15 +30,21 @@ from __future__ import annotations
 
 import doctest
 import glob
+import json
 import os
 import re
 import sys
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 _FENCE = re.compile(r"^```(\w*)\s*$")
 # [text](target) — skip images ![..](..) and bare autolinks
 _LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
 _HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*$")
+_BENCH_REF = re.compile(r"\bBENCH_\w+\.json\b")
+# "964ms" / "104.2 ms" — requires the unit, so knob names like
+# ``deadline_ms`` and bare counts never match
+_MS_CLAIM = re.compile(r"(?<![\w.])(\d+(?:\.\d+)?)\s?ms\b")
+_BENCH_OPT_OUT = "bench-claims: ignore"
 
 
 def _slugify(heading: str) -> str:
@@ -81,6 +95,95 @@ def _anchors(path: str) -> set:
                 slug, n = f"{base}-{n}", n + 1
             slugs.add(slug)
     return slugs
+
+
+def _numeric_leaves(obj, prefix: str = "") -> Dict[str, float]:
+    """Flatten a JSON value to {dotted.path: number} over numeric leaves."""
+    out: Dict[str, float] = {}
+    if isinstance(obj, dict):
+        for key, val in obj.items():
+            out.update(_numeric_leaves(val, f"{prefix}.{key}" if prefix
+                                       else str(key)))
+    elif isinstance(obj, list):
+        for i, val in enumerate(obj):
+            out.update(_numeric_leaves(val, f"{prefix}[{i}]"))
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix] = float(obj)
+    return out
+
+
+def _paragraphs(text: str) -> List[Tuple[int, str]]:
+    """(first_line, body) for blank-line-separated blocks outside fences."""
+    out, buf, start = [], [], None
+    in_fence = False
+    for ln, raw in enumerate(text.splitlines(), 1):
+        if raw.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        if raw.strip():
+            if start is None:
+                start = ln
+            buf.append(raw)
+        elif buf:
+            out.append((start, "\n".join(buf)))
+            buf, start = [], None
+    if buf:
+        out.append((start, "\n".join(buf)))
+    return out
+
+
+def _claim_matches(claim_ms: float, values: Dict[str, float]) -> bool:
+    """A quoted figure matches if some artifact number rounds to it."""
+    for val in values.values():
+        if abs(val - claim_ms) < 1.0 or (
+            val and abs(val - claim_ms) / abs(val) < 0.005
+        ):
+            return True
+    return False
+
+
+def check_bench_claims(path: str, text: str, base: str) -> List[str]:
+    """Check 4: ``NNN ms`` prose against the named ``BENCH_*.json``."""
+    problems: List[str] = []
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for ln, para in _paragraphs(text):
+        refs = sorted(set(_BENCH_REF.findall(para)))
+        if not refs or _BENCH_OPT_OUT in para:
+            continue
+        values: Dict[str, float] = {}
+        missing = []
+        for ref in refs:
+            apath = os.path.join(base, ref)
+            if not os.path.exists(apath):
+                apath = os.path.join(root, ref)
+            if not os.path.exists(apath):
+                missing.append(ref)
+                continue
+            try:
+                with open(apath, encoding="utf-8") as f:
+                    values.update(_numeric_leaves(json.load(f)))
+            except (OSError, ValueError) as e:
+                problems.append(f"{path}:{ln}: unreadable artifact {ref}: {e}")
+        for ref in missing:
+            problems.append(
+                f"{path}:{ln}: references {ref} but no such artifact is "
+                f"committed"
+            )
+        if not values:
+            continue
+        for m in _MS_CLAIM.finditer(para):
+            claim = float(m.group(1))
+            if not _claim_matches(claim, values):
+                problems.append(
+                    f"{path}:{ln}: claim '{m.group(0).strip()}' not found in "
+                    f"{', '.join(refs)} — stale number? (rerun the bench or "
+                    f"fix the prose; opt out with '{_BENCH_OPT_OUT}')"
+                )
+    return problems
 
 
 def check_file(path: str) -> List[str]:
@@ -140,15 +243,18 @@ def check_file(path: str) -> List[str]:
                     f"{path}:{ln}: broken anchor -> {target} "
                     f"(no heading slugs to '{frag}')"
                 )
+
+    problems.extend(check_bench_claims(path, text, base))
     return problems
 
 
 def main(paths: List[str]) -> int:
     if not paths:
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-        paths = [os.path.join(root, "README.md")] + sorted(
-            glob.glob(os.path.join(root, "docs", "*.md"))
-        )
+        paths = [
+            os.path.join(root, "README.md"),
+            os.path.join(root, "ROADMAP.md"),
+        ] + sorted(glob.glob(os.path.join(root, "docs", "*.md")))
     problems: List[str] = []
     for p in paths:
         problems.extend(check_file(p))

@@ -11,6 +11,12 @@ Checks, in order:
   2. Multi-shard search is set-equivalent to single-device search on the
      same data under pool-saturating params (both exact → same id sets,
      same sorted distances bit-for-bit), in ONE jitted dispatch per chunk.
+  2b. Merge strategies: the butterfly tree reduction (``merge="tree"``,
+     what "auto" picks on 8 shards) is bit-equal in sorted distances to
+     the flat ``merge="gather"`` reference, pruning changes nothing
+     bit-for-bit, ``search_local`` + one host merge reproduces the
+     merged distances, each strategy stays one dispatch per chunk, and
+     a non-pow2 shard count falls back (auto) or raises (explicit tree).
   3. Non-divisible n and fully-empty shards (sentinel-free padding):
      still set-equivalent; padding duplicates merge away.
   4. memory_report per-device bytes ≈ total/n_shards, cross-checked
@@ -112,6 +118,57 @@ print("OK: one dispatch per query chunk (4 chunks -> 4 dispatches)")
 for row in np.asarray(ids_s):
     live = row[row >= 0]
     assert len(set(live.tolist())) == len(live), row
+
+# --- 2b. merge strategies: tree vs gather parity --------------------------
+ids_g, d2_g = sharded.search(queries, SP, merge="gather")
+assert sharded.last_dispatch_count == 1, sharded.last_dispatch_count
+ids_t, d2_t = sharded.search(queries, SP, merge="tree")
+assert sharded.last_dispatch_count == 1, sharded.last_dispatch_count
+# both outputs are distance-sorted, so sorted-d2 bit-equality is direct
+# equality; ids may only differ inside exact-distance ties
+np.testing.assert_array_equal(np.asarray(d2_t), np.asarray(d2_g))
+assert_set_equal(ids_t, ids_g, "tree reduction id-sets == gather reference")
+print("OK: tree reduction sorted-d2 bit-equal to merge='gather'")
+
+# config default "auto" resolved to the tree on 8 shards: same executable,
+# so the section-2 results above must be bit-equal to the explicit tree
+np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_t))
+np.testing.assert_array_equal(np.asarray(d2_s), np.asarray(d2_t))
+print("OK: merge='auto' on 8 shards is the tree path, bit-equal")
+
+# distance-bound pruning is exact: bit-equal INCLUDING ids
+ids_p, d2_p = sharded.search(queries, SP, merge="tree", prune=True)
+np.testing.assert_array_equal(np.asarray(ids_p), np.asarray(ids_t))
+np.testing.assert_array_equal(np.asarray(d2_p), np.asarray(d2_t))
+print("OK: prune=True bit-equal to the unpruned tree (ids included)")
+
+# search_local = the same dispatch minus the reduction: one host-side
+# flat merge of the per-shard deflated top-k's reproduces the merged
+# distances exactly
+from repro.core.search import merge_topk
+
+loc_i, loc_d = sharded.search_local(queries, SP)
+assert loc_i.shape == (8, Q, SP.k), loc_i.shape
+_, host_d = merge_topk(
+    jnp.moveaxis(loc_i, 0, 1).reshape(Q, -1),
+    jnp.moveaxis(loc_d, 0, 1).reshape(Q, -1),
+    k=SP.k,
+)
+np.testing.assert_array_equal(np.asarray(host_d), np.asarray(d2_t))
+print("OK: search_local + host flat merge reproduces merged distances")
+
+# non-pow2 shard counts: "auto" falls back to gather; explicit tree raises
+sh3 = ShardedHilbertIndex.build(jnp.asarray(data), CFG, mesh=data_mesh(3))
+i3a, d3a = sh3.search(queries, SP)
+i3g, d3g = sh3.search(queries, SP, merge="gather")
+np.testing.assert_array_equal(np.asarray(i3a), np.asarray(i3g))
+np.testing.assert_array_equal(np.asarray(d3a), np.asarray(d3g))
+try:
+    sh3.search(queries, SP, merge="tree")
+except ValueError:
+    print("OK: 3 shards: auto==gather; explicit merge='tree' raises")
+else:
+    raise AssertionError("merge='tree' on 3 shards must raise")
 
 # --- 3. non-divisible n + fully-empty shards ------------------------------
 for n_odd in (N + 3, 11):  # 11 over 8 shards: n_pad=2, shards 6..7 empty

@@ -84,6 +84,12 @@ def expect_bitequal(mut, fresh, live_ids, label):
 idx = ShardedMutableHilbertIndex.build(
     jnp.asarray(data), CFG, mesh=MESH, buffer_capacity=64, max_segments=4
 )
+# both sharded facades share the LRU-bounded compiled-dispatch cache
+from repro.index.facade import BoundedJitCache
+from repro.index.sharded_mutable import _CHUNK_FN_CACHE_MAX
+
+assert isinstance(idx._chunk_fns, BoundedJitCache)
+assert idx._chunk_fns.max_entries == _CHUNK_FN_CACHE_MAX
 static = ShardedHilbertIndex.build(jnp.asarray(data), CFG, mesh=MESH)
 expect_bitequal(idx, static, np.arange(N, dtype=np.int32),
                 "fresh build == static sharded (1 dispatch)")
@@ -132,6 +138,19 @@ assert not np.isin(np.asarray(pi2), probe).any(), "deleted probes leaked"
 print(f"OK: churn stream (segments={idx.n_segments}, "
       f"buffered={idx.n_buffered}, 1 dispatch, probes exact, "
       f"no tombstone leaks)")
+
+# --- 2b. cross-shard merge strategies on the LSM layout -------------------
+# Mid-churn state (multiple generations + live buffer + tombstones) is the
+# worst case for the reduction: per-generation inflated pools, duplicate
+# ids across padding, masked dead rows.  Tree must still match gather.
+mg_i, mg_d = idx.search(queries, SP, merge="gather")
+mt_i, mt_d = idx.search(queries, SP, merge="tree")
+assert idx.last_dispatch_count == 1
+np.testing.assert_array_equal(np.asarray(mt_d), np.asarray(mg_d))
+mp_i, mp_d = idx.search(queries, SP, merge="tree", prune=True)
+np.testing.assert_array_equal(np.asarray(mp_i), np.asarray(mt_i))
+np.testing.assert_array_equal(np.asarray(mp_d), np.asarray(mt_d))
+print("OK: mid-churn tree reduction bit-equal to gather (prune exact too)")
 
 # --- 3. full compaction == fresh sharded rebuild (ACCEPTANCE) -------------
 idx.compact()

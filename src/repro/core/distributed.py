@@ -551,3 +551,123 @@ def _final_adc(points, best_id, quant, codes, k: int):
     d2 = jnp.where(best_id == jnp.arange(n, dtype=jnp.int32)[:, None], jnp.inf, d2)
     neg, idx = lax.top_k(-d2, k)
     return jnp.take_along_axis(best_id, idx, axis=1), -neg
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard top-k merge (the sharded facades' reduction tail)
+# ---------------------------------------------------------------------------
+
+
+def is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def resolve_merge(merge: str, n_shards: int) -> str:
+    """Resolve a ``merge`` knob ("auto" | "gather" | "tree") to a concrete path.
+
+    ``"auto"`` picks the butterfly tree when the shard count is a power of
+    two (its XOR-partner schedule needs one) and the flat gather otherwise;
+    an *explicit* ``"tree"`` on a non-pow2 shard count is a caller error and
+    raises rather than silently degrading.
+    """
+    if merge not in ("auto", "gather", "tree"):
+        raise ValueError(f"merge={merge!r}: expected 'auto', 'gather' or 'tree'")
+    if merge == "auto":
+        return "tree" if is_pow2(n_shards) else "gather"
+    if merge == "tree" and not is_pow2(n_shards):
+        raise ValueError(
+            f"merge='tree' needs a power-of-two shard count, got {n_shards}; "
+            "use merge='auto' to fall back to 'gather'"
+        )
+    return merge
+
+
+def tree_merge_topk(ids, d2, *, k: int, axis: str, axis_size: int,
+                    prune: bool = False):
+    """Butterfly all-reduce of :func:`repro.core.search.merge_topk`.
+
+    Runs INSIDE a shard_map body.  Each rank first deflates its local
+    candidate pool (Q, C) — however inflated by padding/tombstone slack —
+    to a true local top-k, then performs log2(S) ``lax.ppermute`` hops on
+    the XOR-partner (recursive-doubling) schedule: at step ``s`` rank
+    ``r`` exchanges its running (Q, k) partial with rank ``r ^ s`` and
+    merges.  Interconnect traffic is k rows per query per hop instead of
+    the gather path's (S-1)·C rows, and the flat merge over an S·C pool
+    is replaced by log2(S) merges over 2k pools.
+
+    Determinism: both members of a pair merge the SAME concatenation —
+    the lower rank's block first (``merge_topk_pair`` keyed on
+    ``(rank & s) == 0``) — so by induction every rank holds bit-identical
+    partials after every hop, and the final (Q, k) is safe to declare
+    replicated (``out_specs P(None)``) even with ``check_rep=False``.
+
+    ``prune=True`` adds one ``lax.pmin`` of each rank's local kth-best
+    distance before the first hop and masks local candidates strictly
+    worse than that global bound λ.  Exact: some rank holds k distinct
+    ids at distance ≤ λ, so a candidate with d > λ can never enter the
+    global top-k, and survivors' tie order is untouched — results stay
+    bit-equal, ids included.
+
+    Requires ``axis_size`` to be a power of two (checked by
+    :func:`resolve_merge` before tracing).
+    """
+    from repro.core import search as search_lib
+
+    ids_k, d_k = search_lib.merge_topk(ids, d2, k=k)  # shard-local deflation
+    if axis_size == 1:
+        return ids_k, d_k
+    rank = lax.axis_index(axis)
+    if prune:
+        lam = lax.pmin(d_k[:, -1], axis)
+        keep = d_k <= lam[:, None]
+        ids_k = jnp.where(keep, ids_k, -1)
+        d_k = jnp.where(keep, d_k, jnp.inf)
+    step = 1
+    while step < axis_size:
+        perm = [(r, r ^ step) for r in range(axis_size)]
+        other_ids = lax.ppermute(ids_k, axis, perm)
+        other_d = lax.ppermute(d_k, axis, perm)
+        first = (rank & step) == 0
+        ids_k, d_k = search_lib.merge_topk_pair(
+            ids_k, d_k, other_ids, other_d, first, k=k
+        )
+        step *= 2
+    return ids_k, d_k
+
+
+def gather_merge_topk(ids, d2, *, k: int, axis: str):
+    """Flat reference reduction: all_gather every rank's pool, merge once.
+
+    The pre-tree behavior, kept bit-exact as ``merge="gather"`` — the
+    parity baseline the tree path is asserted against in
+    ``scripts/sharded_check.py``.  Per device it moves (S-1)·C candidate
+    rows per query and flat-merges an S·C pool.
+    """
+    from repro.core import search as search_lib
+
+    all_ids = lax.all_gather(ids, axis)  # (S, Q, C)
+    all_d = lax.all_gather(d2, axis)
+    qn = ids.shape[0]
+    pool = all_ids.shape[0] * all_ids.shape[2]
+    merged_ids = jnp.moveaxis(all_ids, 0, 1).reshape(qn, pool)
+    merged_d = jnp.moveaxis(all_d, 0, 1).reshape(qn, pool)
+    return search_lib.merge_topk(merged_ids, merged_d, k=k)
+
+
+def cross_shard_merge_topk(ids, d2, *, k: int, axis: str, axis_size: int,
+                           merge: str, prune: bool = False):
+    """The one cross-shard merge tail shared by both sharded facades.
+
+    Called inside the shard_map body with each rank's (Q, C) local
+    candidates (global ids, -1 padding, +inf masked distances); returns a
+    replicated (Q, k).  ``merge`` must already be resolved to ``"gather"``
+    or ``"tree"`` (see :func:`resolve_merge`); the two return identical
+    sorted distances bit-for-bit, and identical ids up to distance ties
+    (with ``prune``, ids are bit-equal to the unpruned tree).
+    """
+    if merge == "gather":
+        return gather_merge_topk(ids, d2, k=k, axis=axis)
+    if merge == "tree":
+        return tree_merge_topk(ids, d2, k=k, axis=axis, axis_size=axis_size,
+                               prune=prune)
+    raise ValueError(f"unresolved merge strategy {merge!r}")

@@ -400,6 +400,13 @@ def merge_topk(ids, dists, *, k):
       * **Padding**: when fewer than ``k`` finite candidates exist, the
         tail is id -1 / distance +inf — the same contract as
         :func:`brute_force_topk` and the stage-2 pipeline.
+
+    Associativity is what makes *tree* reduction exact: merging
+    per-source top-k's pairwise in any bracketing yields sorted
+    distances bit-equal to one flat merge of the full pool (property-
+    tested in ``tests/test_sharded.py``), which is the basis of the
+    sharded facades' log2(S)-hop cross-shard merge
+    (:func:`repro.core.distributed.cross_shard_merge_topk`).
     """
     qn, c = ids.shape
     # Locate duplicates without reordering: stable-lexsort each row by
@@ -428,6 +435,34 @@ def merge_topk(ids, dists, *, k):
             [out_d, jnp.full((qn, pad), jnp.inf, out_d.dtype)], axis=1
         )
     return out_ids, out_d
+
+
+def merge_topk_pair(ids_a, d_a, ids_b, d_b, first, *, k):
+    """One hop of a pairwise :func:`merge_topk` tree reduction.
+
+    Concatenates the two (Q, k) candidate sets and flat-merges them, with
+    ``first`` — a traced boolean, broadcast over queries — choosing which
+    source occupies the *leading* columns.  Column order is what breaks
+    equal-distance ties in ``merge_topk``, so when two ranks of a
+    butterfly exchange partial results and both call this with ``first``
+    keyed to the lower rank, they merge identical column layouts and
+    produce bit-identical outputs — the invariant that lets the sharded
+    facades emit the reduction's result as a replicated array.
+
+    Not jitted standalone: it is traced inside shard_map bodies (and the
+    pure-host property test) where ``first`` is a per-rank scalar.
+    """
+    cat_i = jnp.where(
+        first,
+        jnp.concatenate([ids_a, ids_b], axis=1),
+        jnp.concatenate([ids_b, ids_a], axis=1),
+    )
+    cat_d = jnp.where(
+        first,
+        jnp.concatenate([d_a, d_b], axis=1),
+        jnp.concatenate([d_b, d_a], axis=1),
+    )
+    return merge_topk(cat_i, cat_d, k=k)
 
 
 def inflate_k(k: int, dead: int, pool: int) -> int:

@@ -59,6 +59,24 @@ class IndexConfig:
         recompile gauge assert in ``benchmarks/churn.py``.  Costs a
         bounded amount of redundant rows (< 2x) and a matching top-k
         inflation; results stay exact w.r.t. the live rows.
+      merge: cross-shard top-k merge strategy for the sharded facades.
+        ``"gather"`` is the flat reference path (one ``all_gather`` of
+        every shard's inflated candidate pool, one ``merge_topk``);
+        ``"tree"`` is the butterfly reduction (log2(S) ``ppermute`` hops
+        exchanging exactly k rows per query per hop — see
+        :func:`repro.core.distributed.cross_shard_merge_topk`), which
+        requires a power-of-two shard count; ``"auto"`` (the default)
+        picks ``"tree"`` when the shard count is a power of two and
+        falls back to ``"gather"`` otherwise.  The two paths return the
+        same results (sorted distances bit-equal; ids equal up to
+        distance ties).  Overridable per call via ``search(merge=...)``.
+      merge_prune: with the tree merge, additionally exchange each
+        shard's local kth-best distance (one ``pmin``) before the first
+        hop and mask candidates that provably cannot enter the global
+        top-k.  Exact — pruned entries are strictly worse than the
+        global kth-best, so even tie order is unchanged — but one more
+        collective; off by default.  Overridable via
+        ``search(prune=...)``.
     """
 
     forest: ForestConfig = ForestConfig()
@@ -68,6 +86,8 @@ class IndexConfig:
     shards: Optional[int] = None
     mutable: bool = False
     seal_pow2: bool = False
+    merge: str = "auto"
+    merge_prune: bool = False
 
     def to_dict(self) -> Dict[str, Any]:
         """Manifest form of the config (the checkpoint round-trip).
@@ -84,6 +104,8 @@ class IndexConfig:
             "shards": self.shards,
             "mutable": self.mutable,
             "seal_pow2": self.seal_pow2,
+            "merge": self.merge,
+            "merge_prune": self.merge_prune,
         }
 
     @classmethod
@@ -105,4 +127,6 @@ class IndexConfig:
             shards=None if shards is None else int(shards),
             mutable=bool(d.get("mutable", False)),
             seal_pow2=bool(d.get("seal_pow2", False)),
+            merge=str(d.get("merge", "auto")),
+            merge_prune=bool(d.get("merge_prune", False)),
         )

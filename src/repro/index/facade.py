@@ -23,6 +23,7 @@ import dataclasses
 import json
 import os
 import time
+from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -41,6 +42,7 @@ from repro.obs.trace import span
 
 __all__ = [
     "HilbertIndex",
+    "BoundedJitCache",
     "build_with_timings",
     "resolve_backend",
     "save_index_bundle",
@@ -79,6 +81,48 @@ def _pow2_bucket(m: int, cap: int) -> int:
     while b < m and b < cap:
         b <<= 1
     return min(b, cap)
+
+
+class BoundedJitCache:
+    """LRU-bounded cache of compiled per-shape dispatch closures.
+
+    The sharded facades key one jitted shard_map executable per
+    (bucket, k, merge-knob, ...) tuple.  Keys recycle by construction in
+    steady state (pow2 query buckets, pow2-padded seals), but a
+    long-lived process that changes params or churns through segment
+    layouts would otherwise accumulate one executable per *historical*
+    shape forever.  Both ``ShardedHilbertIndex`` and
+    ``ShardedMutableHilbertIndex`` share this bound: least-recently-used
+    eviction at ``max_entries``, where a ``get`` hit refreshes recency.
+    Eviction drops our reference to the closure; XLA frees the
+    executable when the last reference dies.
+    """
+
+    def __init__(self, max_entries: int = 32):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[tuple, object]" = OrderedDict()
+
+    def get(self, key):
+        fn = self._entries.get(key)
+        if fn is not None:
+            self._entries.move_to_end(key)
+        return fn
+
+    def put(self, key, fn) -> None:
+        while len(self._entries) >= self.max_entries:
+            self._entries.popitem(last=False)
+        self._entries[key] = fn
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
 
 
 def resolve_backend(backend: str) -> str:

@@ -22,12 +22,20 @@ Search
   ONE jitted dispatch per query chunk: inside ``shard_map`` (queries
   replicated, rows sharded) each device runs PR 3's
   :func:`repro.core.search.fused_search_chunk` over its shard, maps local
-  hits to global ids, ``all_gather``s the per-shard top-k's and merges
-  them with the associative :func:`repro.core.search.merge_topk` — the
-  same merge the mutable index uses across segments.  Every shard is
-  searched for ``k + pad_max`` results (``pad_max`` = the largest padding
-  count among non-empty shards, a static build-time int) so duplicate
-  padding rows can never crowd a distinct neighbor out of the merge.
+  hits to global ids, **deflates** its inflated candidate pool to a true
+  local top-k, and the shards reduce via
+  :func:`repro.core.distributed.cross_shard_merge_topk`: by default a
+  butterfly tree reduction of the associative
+  :func:`repro.core.search.merge_topk` — log2(S) ``ppermute`` hops, each
+  exchanging exactly k rows per query (``merge="tree"``, auto-selected on
+  power-of-two shard counts), optionally preceded by a ``pmin``
+  distance-bound prune (``merge_prune``).  The flat
+  ``all_gather``-everything + one ``merge_topk`` path survives bit-exact
+  as ``merge="gather"`` — the parity reference and the non-pow2
+  fallback.  Every shard is searched for ``k + pad_max`` results
+  (``pad_max`` = the largest padding count among non-empty shards, a
+  static build-time int) so duplicate padding rows can never crowd a
+  distinct neighbor out of the merge.
 
   All shards share ONE globally fit quantizer, so per-shard ADC distances
   dequantize against the same centroids: distances merged across shards
@@ -57,7 +65,6 @@ from typing import Dict, List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
@@ -70,6 +77,7 @@ from repro.core.types import SearchParams
 from repro.index.config import IndexConfig
 from repro.obs.dispatch import dispatch_scope
 from repro.index.facade import (
+    BoundedJitCache,
     HilbertIndex,
     _pow2_bucket,
     build_with_timings,
@@ -209,7 +217,7 @@ class ShardedHilbertIndex:
     pad_max: int                       # largest pad count among non-empty shards
 
     def __post_init__(self):
-        self._chunk_fns: Dict[tuple, object] = {}
+        self._chunk_fns = BoundedJitCache()
         self.last_dispatch_count = 0
 
     # -- introspection -------------------------------------------------------
@@ -402,6 +410,17 @@ class ShardedHilbertIndex:
 
     # -- search --------------------------------------------------------------
 
+    def _resolve_merge(
+        self, merge: Optional[str], prune: Optional[bool]
+    ) -> Tuple[str, bool]:
+        """Per-call knobs default to the config; "auto" resolves by S."""
+        merge = distributed_lib.resolve_merge(
+            merge if merge is not None else self.config.merge, self.n_shards
+        )
+        if prune is None:
+            prune = self.config.merge_prune
+        return merge, bool(prune)
+
     def search(
         self,
         queries: jax.Array,
@@ -409,6 +428,8 @@ class ShardedHilbertIndex:
         *,
         backend: str = "auto",
         query_chunk: Optional[int] = None,
+        merge: Optional[str] = None,
+        prune: Optional[bool] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Mesh-wide Algorithm-1 search.
 
@@ -419,6 +440,10 @@ class ShardedHilbertIndex:
           backend: kernel routing for the per-shard fused pipeline.
           query_chunk: per-dispatch chunk cap (default
             ``config.query_chunk``).
+          merge: cross-shard merge strategy, ``"auto"|"gather"|"tree"``
+            (default ``config.merge``); see :class:`IndexConfig`.
+          prune: distance-bound early pruning on the tree path (default
+            ``config.merge_prune``).
 
         Returns:
           ``(ids (Q, k) int32, sq_distances (Q, k) float32)`` with GLOBAL
@@ -426,10 +451,11 @@ class ShardedHilbertIndex:
 
         One jitted dispatch per query chunk (``last_dispatch_count`` records
         the count for the most recent call): the whole shard_map — per-shard
-        fused pipeline, gid mapping, all_gather, cross-shard merge — is one
-        XLA computation.  Chunks are padded to power-of-two buckets exactly
-        like ``HilbertIndex.search``.
+        fused pipeline, gid mapping, shard-local deflation, cross-shard
+        reduction — is one XLA computation.  Chunks are padded to
+        power-of-two buckets exactly like ``HilbertIndex.search``.
         """
+        merge, prune = self._resolve_merge(merge, prune)
         if self.single is not None:
             chunk = query_chunk or self.config.query_chunk
             self.last_dispatch_count = -(-queries.shape[0] // chunk)
@@ -447,10 +473,8 @@ class ShardedHilbertIndex:
                 jnp.zeros((0, params.k), jnp.int32),
                 jnp.zeros((0, params.k), jnp.float32),
             )
-        window = min(2 * params.h + 1, self.n_pad)
-        k_local = min(params.k + self.pad_max, params.k2 * window)
-        k_local = max(k_local, 1)
-        fn = self._chunk_fn(params, k_local, use_kernels)
+        k_local = self._k_local(params)
+        fn = self._chunk_fn(params, k_local, use_kernels, merge, prune)
         outs_i, outs_d = [], []
         for s in range(0, qn, query_chunk):
             q = queries[s : s + query_chunk]
@@ -469,14 +493,72 @@ class ShardedHilbertIndex:
             outs_d.append(dists)
         return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
 
-    def _chunk_fn(self, params: SearchParams, k_local: int, use_kernels: bool):
-        key = (params.k1, params.k2, params.h, params.k, k_local, use_kernels)
+    def search_local(
+        self,
+        queries: jax.Array,
+        params: SearchParams = SearchParams(),
+        *,
+        backend: str = "auto",
+        query_chunk: Optional[int] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Per-shard search WITHOUT the cross-shard reduction.
+
+        Runs the identical shard_map core as :meth:`search` — fused
+        per-shard pipeline, gid mapping, shard-local k deflation — but
+        stops before any collective and returns the still-sharded
+        ``(ids (S, Q, k), sq_distances (S, Q, k))`` stacks.  This is the
+        in-situ "shard core" stage of the sharded path: what the
+        benchmark's merge-tax guard compares the merged latency against,
+        so the reduction cost is measured on the same dispatch shape
+        rather than against a standalone single-shard run.
+        """
+        if self.single is not None:
+            ids, d2 = self.single.search(
+                queries, params, backend=backend, query_chunk=query_chunk,
+                fused=True,
+            )
+            return ids[None], d2[None]
+        use_kernels = resolve_backend(backend) == "pallas"
+        if query_chunk is None:
+            query_chunk = self.config.query_chunk
+        qn = queries.shape[0]
+        if qn == 0:
+            z = jnp.zeros((self.n_shards, 0, params.k))
+            return z.astype(jnp.int32), z.astype(jnp.float32)
+        k_local = self._k_local(params)
+        fn = self._chunk_fn(params, k_local, use_kernels, "local", False)
+        outs_i, outs_d = [], []
+        for s in range(0, qn, query_chunk):
+            q = queries[s : s + query_chunk]
+            m = q.shape[0]
+            bucket = _pow2_bucket(m, query_chunk)
+            if bucket > m:
+                q = jnp.pad(q, ((0, bucket - m), (0, 0)))
+            with dispatch_scope("sharded.search_local"):
+                ids, dists = fn(
+                    q, self.stack, self.perms, self.flips, self.quant
+                )
+            if bucket > m:
+                ids, dists = ids[:, :m], dists[:, :m]
+            outs_i.append(ids)
+            outs_d.append(dists)
+        return jnp.concatenate(outs_i, axis=1), jnp.concatenate(outs_d, axis=1)
+
+    def _k_local(self, params: SearchParams) -> int:
+        window = min(2 * params.h + 1, self.n_pad)
+        return max(1, min(params.k + self.pad_max, params.k2 * window))
+
+    def _chunk_fn(self, params: SearchParams, k_local: int, use_kernels: bool,
+                  merge: str, prune: bool):
+        key = (params.k1, params.k2, params.h, params.k, k_local, use_kernels,
+               merge, prune)
         fn = self._chunk_fns.get(key)
         if fn is not None:
             return fn
         mesh = self.mesh
         fcfg = self.config.forest
         k1, k2, h, k = params.k1, params.k2, params.h, params.k
+        n_shards = self.n_shards
 
         def shard_fn(q, st, perms, flips, quant):
             # shard_map keeps the sharded leading axis at local size 1.
@@ -492,24 +574,28 @@ class ShardedHilbertIndex:
                 ids_l >= 0, st.id_map[0][jnp.maximum(ids_l, 0)], -1
             )
             d2 = jnp.where(gids >= 0, d2, jnp.inf)
-            all_g = lax.all_gather(gids, "data")   # (S, Q, k_local)
-            all_d = lax.all_gather(d2, "data")
-            qn = q.shape[0]
-            pool = all_g.shape[0] * k_local
-            merged_ids = jnp.moveaxis(all_g, 0, 1).reshape(qn, pool)
-            merged_d = jnp.moveaxis(all_d, 0, 1).reshape(qn, pool)
-            return search_lib.merge_topk(merged_ids, merged_d, k=k)
-
+            if merge == "local":
+                # search_local: deflate and stop pre-collective, sharded out.
+                ids_k, d_k = search_lib.merge_topk(gids, d2, k=k)
+                return ids_k[None], d_k[None]
+            return distributed_lib.cross_shard_merge_topk(
+                gids, d2, k=k, axis="data", axis_size=n_shards,
+                merge=merge, prune=prune,
+            )
+        out_specs = (
+            (P("data"), P("data")) if merge == "local"
+            else (P(None, None), P(None, None))
+        )
         fn = jax.jit(
             shard_map(
                 shard_fn,
                 mesh=mesh,
                 in_specs=(P(None, None), P("data"), P(), P(), P()),
-                out_specs=(P(None, None), P(None, None)),
+                out_specs=out_specs,
                 check_rep=False,
             )
         )
-        self._chunk_fns[key] = fn
+        self._chunk_fns.put(key, fn)
         return fn
 
     # -- persistence ---------------------------------------------------------

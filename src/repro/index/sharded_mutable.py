@@ -30,8 +30,10 @@ layout — the only one that scales past one host — stops being static:
   by its padding count plus a power-of-two bucket of its worst per-shard
   tombstone count (:func:`repro.core.search.inflate_k`), so dead or
   duplicate rows can never crowd a live neighbor out of the pool — maps
-  local rows to external ids, masks tombstones, ``all_gather``s and merges
-  everything with the associative :func:`repro.core.search.merge_topk`.
+  local rows to external ids, masks tombstones, deflates the inflated
+  pool to a local top-k and reduces across shards via
+  :func:`repro.core.distributed.cross_shard_merge_topk` (butterfly tree
+  by default, flat ``all_gather`` as the ``merge="gather"`` reference).
 * **Compaction** — :meth:`compact` gathers the survivors in external-id
   (= insertion) order and literally calls
   :class:`repro.index.ShardedHilbertIndex`.build over them: the global
@@ -60,7 +62,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
@@ -73,6 +74,7 @@ from repro.index.config import IndexConfig
 from repro.obs.dispatch import dispatch_scope
 from repro.obs.trace import span
 from repro.index.facade import (
+    BoundedJitCache,
     _pow2_bucket,
     build_with_timings,
     load_index_bundle,
@@ -110,8 +112,9 @@ _FORMAT_VERSION = 4
 # Compiled search dispatches kept per index.  Keys change whenever the LSM
 # shape does (generation sealed/merged, alive capacity doubled, tombstone
 # bucket moved), so a long-lived streaming server would otherwise pin one
-# shard_map executable per historical shape forever; oldest-first eviction
-# bounds that while keeping every shape the CURRENT state cycles through.
+# shard_map executable per historical shape forever; the shared
+# ``repro.index.facade.BoundedJitCache`` (LRU at this bound) caps that
+# while keeping every shape the CURRENT state cycles through.
 _CHUNK_FN_CACHE_MAX = 32
 
 
@@ -219,7 +222,7 @@ class ShardedMutableHilbertIndex(WalFacade):
         self._gen = 0
         self._alive_key = None
         self._alive_dev = None
-        self._chunk_fns: Dict[tuple, object] = {}
+        self._chunk_fns = BoundedJitCache(_CHUNK_FN_CACHE_MAX)
         self.last_dispatch_count = 0
         self._wal: Optional[wal_lib.WriteAheadLog] = None
 
@@ -850,6 +853,8 @@ class ShardedMutableHilbertIndex(WalFacade):
         *,
         backend: str = "auto",
         query_chunk: Optional[int] = None,
+        merge: Optional[str] = None,
+        prune: Optional[bool] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Mesh-wide streaming search; returns (ext ids (Q, k), sq-dists).
 
@@ -857,9 +862,12 @@ class ShardedMutableHilbertIndex(WalFacade):
         the count): inside ``shard_map`` every device runs the fused
         pipeline over each sealed generation plus a brute-force pass over
         its buffer slice, masks tombstones against the device-resident
-        alive mask, and the per-shard candidate sets all_gather into one
-        :func:`repro.core.search.merge_topk`.  When fewer than ``k`` live
-        points exist the tail is id -1 / distance +inf.
+        alive mask, deflates the concatenated per-shard pool to a local
+        top-k, and the shards reduce via
+        :func:`repro.core.distributed.cross_shard_merge_topk` — the same
+        ``merge="auto"|"gather"|"tree"`` / ``prune`` knobs as
+        :class:`ShardedHilbertIndex` (defaults from the config).  When
+        fewer than ``k`` live points exist the tail is id -1 / +inf.
 
         A generation tombstoned past its stage-2 candidate pool is
         rewritten on the spot (read-triggered shard-local compaction),
@@ -867,6 +875,10 @@ class ShardedMutableHilbertIndex(WalFacade):
         """
         if params is None:
             params = SearchParams()
+        merge = distributed_lib.resolve_merge(
+            merge if merge is not None else self.config.merge, self.n_shards
+        )
+        prune = self.config.merge_prune if prune is None else bool(prune)
         use_kernels = resolve_backend(backend) == "pallas"
         if query_chunk is None:
             query_chunk = self.config.query_chunk
@@ -900,7 +912,9 @@ class ShardedMutableHilbertIndex(WalFacade):
             seg_meta.append((seg.n_pad, k_seg))
         alive_cap, alive = self._alive_device()
         bpts, bids = self._device_buffers()
-        fn = self._chunk_fn(params, tuple(seg_meta), use_kernels, alive_cap)
+        fn = self._chunk_fn(
+            params, tuple(seg_meta), use_kernels, alive_cap, merge, prune
+        )
         stacks = tuple(seg.stack for seg in self.segments)
         quants = tuple(seg.quant for seg in self.segments)
         repl = NamedSharding(self.mesh, P())
@@ -930,9 +944,9 @@ class ShardedMutableHilbertIndex(WalFacade):
         return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
 
     def _chunk_fn(self, params: SearchParams, seg_meta: tuple,
-                  use_kernels: bool, alive_cap: int):
+                  use_kernels: bool, alive_cap: int, merge: str, prune: bool):
         key = (params.k1, params.k2, params.h, params.k, seg_meta,
-               use_kernels, alive_cap, self.buffer_capacity)
+               use_kernels, alive_cap, self.buffer_capacity, merge, prune)
         fn = self._chunk_fns.get(key)
         if fn is not None:
             return fn
@@ -941,6 +955,7 @@ class ShardedMutableHilbertIndex(WalFacade):
         k1, k2, h, k = params.k1, params.k2, params.h, params.k
         k_buf = max(1, min(k, self.buffer_capacity))
         k_segs = [m[1] for m in seg_meta]
+        n_shards = self.n_shards
 
         def shard_fn(q, stacks, quants, perms, flips, bpts, bids, alive):
             # shard_map keeps every sharded leading axis at local size 1.
@@ -972,13 +987,10 @@ class ShardedMutableHilbertIndex(WalFacade):
             parts_d.append(bd2)
             cg = jnp.concatenate(parts_g, axis=1)
             cd = jnp.concatenate(parts_d, axis=1)
-            all_g = lax.all_gather(cg, "data")   # (S, Q, C)
-            all_d = lax.all_gather(cd, "data")
-            qn = q.shape[0]
-            pool = all_g.shape[0] * cg.shape[1]
-            merged_g = jnp.moveaxis(all_g, 0, 1).reshape(qn, pool)
-            merged_d = jnp.moveaxis(all_d, 0, 1).reshape(qn, pool)
-            return search_lib.merge_topk(merged_g, merged_d, k=k)
+            return distributed_lib.cross_shard_merge_topk(
+                cg, cd, k=k, axis="data", axis_size=n_shards,
+                merge=merge, prune=prune,
+            )
 
         fn = jax.jit(
             shard_map(
@@ -990,9 +1002,7 @@ class ShardedMutableHilbertIndex(WalFacade):
                 check_rep=False,
             )
         )
-        while len(self._chunk_fns) >= _CHUNK_FN_CACHE_MAX:
-            self._chunk_fns.pop(next(iter(self._chunk_fns)))
-        self._chunk_fns[key] = fn
+        self._chunk_fns.put(key, fn)
         return fn
 
     # -- values --------------------------------------------------------------

@@ -20,6 +20,7 @@ docs/OBSERVABILITY.md.
 """
 
 from .dispatch import (
+    accounting_delta,
     accounting_snapshot,
     compiles_total,
     dispatch_counts,
@@ -47,8 +48,8 @@ from .registry import (
 from .trace import Span, Tracer, default_tracer, disable, enable, span
 
 __all__ = [
-    "accounting_snapshot", "compiles_total", "dispatch_counts",
-    "dispatch_scope",
+    "accounting_delta", "accounting_snapshot", "compiles_total",
+    "dispatch_counts", "dispatch_scope",
     "install_compile_listener", "recompile_counts",
     "MetricsServer", "serve_metrics",
     "RecallProbe", "RecallProbeConfig", "exact_topk", "live_points",

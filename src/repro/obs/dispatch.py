@@ -45,6 +45,7 @@ from .registry import default_registry
 __all__ = [
     "install_compile_listener", "compiles_total", "dispatch_scope",
     "dispatch_counts", "recompile_counts", "accounting_snapshot",
+    "accounting_delta",
 ]
 
 _COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
@@ -151,4 +152,35 @@ def accounting_snapshot() -> Dict[str, object]:
         "dispatches_by_site": dispatch_counts(),
         "recompiles_by_site": recompile_counts(),
         "backend_compiles_total": compiles_total(),
+    }
+
+
+def accounting_delta(
+    before: Dict[str, object], after: Dict[str, object]
+) -> Dict[str, object]:
+    """Per-site difference of two :func:`accounting_snapshot` blocks.
+
+    Counters are process-cumulative, so an A/B benchmark that wants "what
+    did THIS variant dispatch/compile" snapshots around each variant and
+    embeds the delta — e.g. the gather-vs-tree comparison in
+    ``benchmarks/sharded_search.py``, where a nonzero recompile delta on
+    a warmed variant would invalidate its timings.  Sites absent from
+    ``before`` count from zero; zero deltas are dropped.
+    """
+
+    def diff(name: str) -> Dict[str, int]:
+        b = before.get(name, {}) or {}
+        a = after.get(name, {}) or {}
+        out = {
+            site: int(n) - int(b.get(site, 0)) for site, n in a.items()
+        }
+        return {site: n for site, n in out.items() if n}
+
+    return {
+        "dispatches_by_site": diff("dispatches_by_site"),
+        "recompiles_by_site": diff("recompiles_by_site"),
+        "backend_compiles_total": (
+            int(after.get("backend_compiles_total", 0))
+            - int(before.get("backend_compiles_total", 0))
+        ),
     }

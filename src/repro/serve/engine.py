@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.checkpoint.wal import WalWriteError
 from repro.core.types import SearchParams
+from repro.index.facade import _pow2_bucket
 from repro.obs.recall import RecallProbe, RecallProbeConfig
 from repro.obs.registry import default_registry
 from repro.obs.trace import span
@@ -328,7 +329,13 @@ class RetrievalEngine:
         self._state_lock = threading.Lock()   # epoch pointer + write log
         self._serve_lock = threading.RLock()  # every index operation
         self._maint_lock = threading.Lock()   # one maintenance cycle at a time
-        self._warm_queries: Dict[SearchParams, np.ndarray] = {}
+        # one representative batch per (params, pow2 dispatch bucket) seen,
+        # so maintenance pre-warms the shadow for EVERY bucket live traffic
+        # uses, not just the last shape observed.  Bounded by construction:
+        # at most log2(query_chunk)+1 buckets per distinct SearchParams.
+        self._warm_queries: Dict[
+            Tuple[SearchParams, int], np.ndarray
+        ] = {}
         self._current = _Epoch(index, 0)
         self._write_log: Optional[List[Tuple[str, Any, Any]]] = None
 
@@ -644,13 +651,13 @@ class RetrievalEngine:
             params = batch[0].params
             with span("engine.batch", requests=len(batch),
                       rows=int(q.shape[0]), epoch=ref.epoch):
-                wq = self._warm_queries.get(params)
-                if wq is None or wq.shape[0] != min(
-                    q.shape[0], self.query_chunk
-                ):
+                m = min(q.shape[0], self.query_chunk)
+                warm_key = (params, _pow2_bucket(m, self.query_chunk))
+                if warm_key not in self._warm_queries:
                     # retained so maintenance can pre-warm the shadow's
-                    # compiled dispatches with a representative batch shape
-                    self._warm_queries[params] = q[: self.query_chunk].copy()
+                    # compiled dispatches for every dispatch bucket the
+                    # live traffic has hit
+                    self._warm_queries[warm_key] = q[:m].copy()
                 with self._serve_lock:
                     # timed inside the lock: batch_latency is the search
                     # execution itself; queue + lock wait shows up in the
@@ -823,7 +830,7 @@ class RetrievalEngine:
                 # compile the post-swap shapes off-path (results
                 # discarded); a failure here would fail identically after
                 # the swap, so let it propagate and abandon the shadow
-                for p, wq in list(self._warm_queries.items()):
+                for (p, _bucket), wq in list(self._warm_queries.items()):
                     shadow.search(wq, p, backend=self.backend,
                                   query_chunk=self.query_chunk)
 

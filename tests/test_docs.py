@@ -24,9 +24,10 @@ def _checker():
 
 def test_repo_docs_are_clean():
     mod = _checker()
-    paths = [os.path.join(_ROOT, "README.md")] + sorted(
-        glob.glob(os.path.join(_ROOT, "docs", "*.md"))
-    )
+    paths = [
+        os.path.join(_ROOT, "README.md"),
+        os.path.join(_ROOT, "ROADMAP.md"),
+    ] + sorted(glob.glob(os.path.join(_ROOT, "docs", "*.md")))
     assert len(paths) >= 3, "expected README + docs tree"
     problems = []
     for p in paths:
@@ -55,6 +56,40 @@ def test_checker_flags_broken_link_and_anchor(tmp_path):
     assert any("broken link" in p and "missing.md" in p for p in problems)
     assert any("broken anchor" in p and "nope" in p for p in problems)
     assert not any("real-heading" in p for p in problems)
+
+
+def test_checker_flags_stale_bench_claims(tmp_path):
+    mod = _checker()
+    art = tmp_path / "BENCH_demo.json"
+    art.write_text('{"latency": {"p50_ms": 180.7, "p99_ms": 193.6}}')
+    doc = tmp_path / "doc.md"
+
+    # matching claims (exact, rounded, with/without space) pass
+    doc.write_text(
+        "# T\n\n`BENCH_demo.json` shows p50 180.7ms and p99 194 ms.\n"
+    )
+    assert not mod.check_file(str(doc))
+
+    # a drifted figure is flagged; knob names like deadline_ms are not
+    doc.write_text(
+        "# T\n\n`BENCH_demo.json` once showed 577ms; deadline_ms=5000.\n"
+    )
+    problems = mod.check_file(str(doc))
+    assert any("577ms" in p and "stale" in p for p in problems)
+    assert not any("5000" in p for p in problems)
+
+    # the opt-out marker silences the paragraph
+    doc.write_text(
+        "# T\n\n<!-- bench-claims: ignore -->\n"
+        "`BENCH_demo.json` historically read 577ms.\n"
+    )
+    assert not mod.check_file(str(doc))
+
+    # naming a missing artifact is itself a problem
+    doc.write_text("# T\n\nSee `BENCH_ghost.json` for 12ms.\n")
+    problems = mod.check_file(str(doc))
+    assert any("BENCH_ghost.json" in p and "no such artifact" in p
+               for p in problems)
 
 
 def test_checker_runs_doctest_blocks(tmp_path):

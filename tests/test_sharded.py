@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.search import merge_topk
+from _hypothesis_compat import given, settings, st
+from repro.core.search import merge_topk, merge_topk_pair
 from repro.data import ann_datasets
 from repro.index import (
     ForestConfig,
@@ -73,6 +74,165 @@ def test_merge_topk_single_sorted_source_passes_through():
     assert out_i.tolist() == [[10, 11, 12, -1]]
     np.testing.assert_array_equal(np.asarray(out_d)[0, :3],
                                   np.asarray(d)[0, :3])
+
+
+# -- merge_topk tree-reduction order invariance ------------------------------
+#
+# The property the butterfly cross-shard reduction rests on: deflating each
+# source to its local top-k and merging pairwise — in ANY bracketing — is
+# sorted-distance bit-equal to one flat merge of the full pool, and every
+# surviving id carries its minimum distance over all source occurrences.
+
+
+def _fold_merge(parts, k, order):
+    """Fold deflated (ids, dists) parts left / right / balanced."""
+
+    def pair(a, b):
+        return merge_topk(
+            jnp.concatenate([a[0], b[0]], axis=1),
+            jnp.concatenate([a[1], b[1]], axis=1),
+            k=k,
+        )
+
+    if order == "left":
+        acc = parts[0]
+        for p in parts[1:]:
+            acc = pair(acc, p)
+        return acc
+    if order == "right":
+        acc = parts[-1]
+        for p in reversed(parts[:-1]):
+            acc = pair(p, acc)
+        return acc
+    assert order == "balanced"
+    while len(parts) > 1:
+        nxt = [
+            pair(parts[i], parts[i + 1])
+            for i in range(0, len(parts) - 1, 2)
+        ]
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    return parts[0]
+
+
+def _check_tree_orders(sources, k):
+    """Assert every reduction order matches the flat merge of the pool."""
+    flat_i = jnp.concatenate([s[0] for s in sources], axis=1)
+    flat_d = jnp.concatenate([s[1] for s in sources], axis=1)
+    ref_i, ref_d = merge_topk(flat_i, flat_d, k=k)
+    parts = [merge_topk(si, sd, k=k) for si, sd in sources]
+    for order in ("left", "right", "balanced"):
+        got_i, got_d = _fold_merge(list(parts), k, order)
+        # outputs are distance-sorted, so sorted-d2 bit-equality is direct
+        np.testing.assert_array_equal(np.asarray(got_d), np.asarray(ref_d))
+        # dedup keep-min: every surviving id carries its global minimum
+        fi, fd = np.asarray(flat_i), np.asarray(flat_d)
+        gi, gd = np.asarray(got_i), np.asarray(got_d)
+        for r in range(gi.shape[0]):
+            for c in range(k):
+                if gi[r, c] < 0:
+                    assert np.isinf(gd[r, c])
+                    continue
+                occ = fd[r][(fi[r] == gi[r, c]) & np.isfinite(fd[r])]
+                assert gd[r, c] == occ.min(), (r, c, gi[r, c])
+
+
+def _random_sources(rng, n_sources, q, k):
+    """Candidate pools dense in dup ids, exact ties, ±inf, and -1 padding."""
+    out = []
+    for _ in range(n_sources):
+        c = int(rng.integers(1, 8))
+        # small id range forces cross-source duplicates; -1 is padding
+        ids = rng.integers(-1, 10, size=(q, c)).astype(np.int32)
+        # quantized distances force exact ties, inf forces masked slots
+        d = rng.choice(
+            [0.25, 0.5, 0.5, 1.0, 2.0, np.inf], size=(q, c)
+        ).astype(np.float32)
+        out.append((jnp.asarray(ids), jnp.asarray(d)))
+    return out
+
+
+def test_merge_tree_orders_random_battery():
+    # Example-based sweep of the same property the hypothesis test walks,
+    # so the invariant is exercised even without the dev extra installed.
+    rng = np.random.default_rng(7)
+    for _ in range(25):
+        n_sources = int(rng.integers(1, 6))
+        k = int(rng.integers(1, 7))
+        _check_tree_orders(_random_sources(rng, n_sources, 2, k), k)
+
+
+def test_merge_tree_orders_edges():
+    inf, k = np.inf, 4
+    # all-invalid pools, k > every pool, duplicate ids at equal distance
+    sources = [
+        (jnp.asarray([[-1, -1]], jnp.int32),
+         jnp.asarray([[0.0, inf]], jnp.float32)),
+        (jnp.asarray([[3]], jnp.int32), jnp.asarray([[2.0]], jnp.float32)),
+        (jnp.asarray([[3, 5]], jnp.int32),
+         jnp.asarray([[2.0, inf]], jnp.float32)),
+    ]
+    _check_tree_orders(sources, k)
+    ref_i, ref_d = merge_topk(
+        jnp.concatenate([s[0] for s in sources], axis=1),
+        jnp.concatenate([s[1] for s in sources], axis=1),
+        k=k,
+    )
+    assert ref_i.tolist() == [[3, -1, -1, -1]]
+    assert np.isinf(np.asarray(ref_d)[0, 1:]).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_merge_tree_orders_property(data):
+    n_sources = data.draw(st.integers(1, 6), label="n_sources")
+    k = data.draw(st.integers(1, 8), label="k")
+    q = data.draw(st.integers(1, 3), label="q")
+    sources = []
+    for _ in range(n_sources):
+        c = data.draw(st.integers(1, 7), label="pool")
+        ids = data.draw(
+            st.lists(
+                st.lists(st.integers(-1, 9), min_size=c, max_size=c),
+                min_size=q, max_size=q,
+            ),
+            label="ids",
+        )
+        dists = data.draw(
+            st.lists(
+                st.lists(
+                    st.sampled_from([0.25, 0.5, 1.0, 1.5, 3.0, np.inf]),
+                    min_size=c, max_size=c,
+                ),
+                min_size=q, max_size=q,
+            ),
+            label="dists",
+        )
+        sources.append((
+            jnp.asarray(np.asarray(ids, np.int32)),
+            jnp.asarray(np.asarray(dists, np.float32)),
+        ))
+    _check_tree_orders(sources, k)
+
+
+def test_merge_topk_pair_rank_order_symmetry():
+    # Both members of a butterfly pair merge the SAME column layout: the
+    # lower rank passes first=True with (mine, theirs), the upper rank
+    # first=False with (mine, theirs) — bit-identical outputs.
+    rng = np.random.default_rng(3)
+    a_i = jnp.asarray(rng.integers(-1, 10, (3, 5)).astype(np.int32))
+    a_d = jnp.asarray(
+        rng.choice([0.25, 0.5, 1.0, np.inf], (3, 5)).astype(np.float32)
+    )
+    b_i = jnp.asarray(rng.integers(-1, 10, (3, 5)).astype(np.int32))
+    b_d = jnp.asarray(
+        rng.choice([0.25, 0.5, 1.0, np.inf], (3, 5)).astype(np.float32)
+    )
+    lo_i, lo_d = merge_topk_pair(a_i, a_d, b_i, b_d, jnp.bool_(True), k=4)
+    hi_i, hi_d = merge_topk_pair(b_i, b_d, a_i, a_d, jnp.bool_(False), k=4)
+    np.testing.assert_array_equal(np.asarray(lo_i), np.asarray(hi_i))
+    np.testing.assert_array_equal(np.asarray(lo_d), np.asarray(hi_d))
 
 
 # -- 1-shard facade: bit-identity with the plain fused path ------------------
@@ -155,6 +315,63 @@ def test_index_config_shards_roundtrip():
     cfg = IndexConfig(shards=4)
     assert IndexConfig.from_dict(cfg.to_dict()) == cfg
     assert IndexConfig.from_dict(IndexConfig().to_dict()).shards is None
+
+
+def test_index_config_merge_knobs_roundtrip():
+    cfg = IndexConfig(merge="tree", merge_prune=True)
+    assert IndexConfig.from_dict(cfg.to_dict()) == cfg
+    # manifests from before the merge knobs existed load with defaults
+    old = IndexConfig().to_dict()
+    del old["merge"], old["merge_prune"]
+    loaded = IndexConfig.from_dict(old)
+    assert loaded.merge == "auto" and loaded.merge_prune is False
+
+
+def test_resolve_merge_policy():
+    from repro.core.distributed import resolve_merge
+
+    assert resolve_merge("auto", 8) == "tree"
+    assert resolve_merge("auto", 6) == "gather"
+    assert resolve_merge("auto", 1) == "tree"
+    assert resolve_merge("gather", 6) == "gather"
+    assert resolve_merge("tree", 4) == "tree"
+    with pytest.raises(ValueError):
+        resolve_merge("tree", 6)
+    with pytest.raises(ValueError):
+        resolve_merge("butterfly", 8)
+
+
+# -- shared bounded dispatch cache -------------------------------------------
+
+
+def test_bounded_jit_cache_lru_eviction():
+    from repro.index.facade import BoundedJitCache
+
+    cache = BoundedJitCache(max_entries=3)
+    for key in ("a", "b", "c"):
+        cache.put(key, key.upper())
+    assert len(cache) == 3
+    assert cache.get("a") == "A"  # refreshes recency
+    cache.put("d", "D")           # evicts "b", the least recently used
+    assert "b" not in cache and cache.get("b") is None
+    assert {"a", "c", "d"} == {k for k in ("a", "c", "d") if k in cache}
+    cache.clear()
+    assert len(cache) == 0
+    with pytest.raises(ValueError):
+        BoundedJitCache(max_entries=0)
+
+
+def test_sharded_facade_uses_bounded_cache(dataset):
+    # sharded.py historically kept one executable per shape FOREVER while
+    # sharded_mutable.py bounded its cache — both now share the LRU cache
+    # (the mutable side is asserted in scripts/sharded_mutable_check.py,
+    # which can actually build one: it needs a multi-device mesh).
+    from repro.index.facade import BoundedJitCache
+
+    data, _ = dataset
+    static = ShardedHilbertIndex.build(jnp.asarray(data), CFG,
+                                       mesh=data_mesh(1))
+    assert isinstance(static._chunk_fns, BoundedJitCache)
 
 
 # -- multi-device parity battery (subprocess, 8 simulated devices) -----------
