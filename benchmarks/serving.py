@@ -15,6 +15,16 @@ sharded-mutable layout:
   tier compaction runs on a shadow copy off the query path and the
   serving index is atomically swapped, so the generation count stays
   bounded while NO query ever waits on a compaction;
+* **churn_maintained_subprocess** — the reader-concurrency A/B against
+  the previous phase: identical load, but the shadow compacts in a CHILD
+  process (``compaction="subprocess"``) and two serve workers execute
+  batches concurrently under the shared read side of the engine's
+  reader-writer lock.  The in-thread phase is the PR-6 architecture's
+  number; this phase is the rw-lock + out-of-process one.  Each
+  maintained phase's swap timeline also records per-phase
+  ``*_locked`` booleans, from which the artifact asserts the serve lock
+  was held exclusively ONLY during snapshot and swap — never during the
+  compact or the catch-up replay;
 * **baseline_obs** — the baseline load with span tracing toggled per
   request (interleaved A/B within one phase): the traced-vs-untraced
   p50 delta is the tracing/metrics tax, clean of cross-phase drift;
@@ -144,7 +154,8 @@ def _worker(smoke: bool) -> dict:
     )
 
     def run_phase(name, *, churn, maintained, obs_on=False,
-                  obs_ab=False, recall_fraction=None):
+                  obs_ab=False, recall_fraction=None,
+                  compaction="thread", serve_threads=1):
         # obs_on: the full observability stack — span tracing, a recall
         # probe sampling served batches — is live for the measured window
         # (the A/B against the identical obs-off phase is the overhead
@@ -168,6 +179,8 @@ def _worker(smoke: bool) -> dict:
             maintenance=policy if maintained else None,
             recall=(RecallProbeConfig(fraction=recall_fraction, seed=0)
                     if recall_fraction else None),
+            compaction=compaction,
+            serve_threads=serve_threads,
             start=True,
         )
         stop = threading.Event()
@@ -283,9 +296,30 @@ def _worker(smoke: bool) -> dict:
             "end_segments": int(stats.get("n_segments", 0)),
             "end_live": int(stats.get("n_live", 0)),
             "obs_on": bool(obs_on),
+            "compaction": compaction,
+            "serve_threads": serve_threads,
             "dispatches_measured": dispatches_meas,
             "recompiles_measured": recompiles_meas,
+            # rw-lock contention over the whole phase (incl. warmup):
+            # how often searches shared the read side, how long writes
+            # actually kept them out
+            "rwlock": {
+                k: float(v) for k, v in eng._serve_lock.stats().items()
+                if k in ("read_acquisitions", "write_acquisitions",
+                         "read_wait_ms", "write_wait_ms", "write_held_ms")
+            },
         }
+        if eng.last_swap_timeline is not None:
+            tl = eng.last_swap_timeline
+            # the lock-exclusivity proof, from recorded maint timings:
+            # exclusive at snapshot + swap, shared/free elsewhere
+            row["swap_timeline_locks"] = {
+                k: tl.get(k) for k in ("snapshot_locked", "compact_locked",
+                                       "replay_locked", "swap_locked")
+            }
+            row["swap_ms"] = tl.get("swap_ms")
+            row["snapshot_ms"] = tl.get("snapshot_ms")
+            row["compact_ms"] = tl.get("compact_ms")
         if online_recall is not None:
             row["recall_online"] = online_recall
             row["recall_offline"] = offline_recall
@@ -306,6 +340,12 @@ def _worker(smoke: bool) -> dict:
     baseline = run_phase("baseline", churn=False, maintained=False)
     churn = run_phase("churn", churn=True, maintained=False)
     maintained = run_phase("churn_maintained", churn=True, maintained=True)
+    # reader-concurrency A/B: identical load, out-of-process compaction
+    # + two serve workers sharing the read lock (vs in-thread above)
+    maintained_sub = run_phase(
+        "churn_maintained_subprocess", churn=True, maintained=True,
+        compaction="subprocess", serve_threads=2,
+    )
     # A/B for the observability tax: the baseline load with tracing
     # toggled per request (interleaved within ONE phase — see run_phase).
     # The recall probe gets its own phase: its exact shadow scoring runs
@@ -329,6 +369,9 @@ def _worker(smoke: bool) -> dict:
                      / max(baseline["search"]["p99"], 1e-9))
     s_ratio_maintained = (maintained["search"]["p99"]
                           / max(baseline["search"]["p99"], 1e-9))
+    ratio_sub = maintained_sub["p99"] / max(baseline["p99"], 1e-9)
+    s_ratio_sub = (maintained_sub["search"]["p99"]
+                   / max(baseline["search"]["p99"], 1e-9))
     result = {
         "n0": n0, "d": d, "n_shards": n_shards,
         "layout": "mutable" if mesh is None else "sharded_mutable",
@@ -339,12 +382,16 @@ def _worker(smoke: bool) -> dict:
                    "k": params.k},
         "policy": {"max_segments": policy.max_segments,
                    "max_tombstone_ratio": policy.max_tombstone_ratio},
-        "phases": [baseline, churn, maintained, baseline_obs,
-                   baseline_probe],
+        "phases": [baseline, churn, maintained, maintained_sub,
+                   baseline_obs, baseline_probe],
         "p99_ratio_churn_vs_baseline": float(ratio_churn),
         "p99_ratio_maintained_vs_baseline": float(ratio_maintained),
+        "p99_ratio_maintained_subprocess_vs_baseline": float(ratio_sub),
         "search_p99_ratio_churn_vs_baseline": float(s_ratio_churn),
         "search_p99_ratio_maintained_vs_baseline": float(s_ratio_maintained),
+        "search_p99_ratio_maintained_subprocess_vs_baseline": float(
+            s_ratio_sub
+        ),
         "maintained_within_2x_of_baseline": bool(ratio_maintained <= 2.0),
         "maintained_search_within_2x_of_baseline": bool(
             s_ratio_maintained <= 2.0
@@ -354,6 +401,53 @@ def _worker(smoke: bool) -> dict:
             "with serving for the same cores while it runs (see module "
             "docstring); on an accelerator the compact builds beside the "
             "serving device"
+        ),
+    }
+    # Reader-concurrency acceptance block: the in-thread vs
+    # out-of-process A/B, and the lock-exclusivity proof read back from
+    # the recorded maint timelines (exclusive ONLY at snapshot + swap).
+    with_tl = [ph for ph in (maintained, maintained_sub)
+               if ph.get("swap_timeline_locks") is not None]
+    locks_ok = bool(with_tl) and all(
+        ph["swap_timeline_locks"]["snapshot_locked"] is True
+        and ph["swap_timeline_locks"]["swap_locked"] is True
+        and ph["swap_timeline_locks"]["compact_locked"] is False
+        and ph["swap_timeline_locks"]["replay_locked"] is False
+        for ph in with_tl
+    )
+    result["reader_concurrency"] = {
+        "in_thread_search_p99_ms": maintained["search"]["p99"],
+        "subprocess_search_p99_ms": maintained_sub["search"]["p99"],
+        "subprocess_search_p99_improves": bool(
+            maintained_sub["search"]["p99"] <= maintained["search"]["p99"]
+        ),
+        "in_thread_request_p99_ms": maintained["p99"],
+        "subprocess_request_p99_ms": maintained_sub["p99"],
+        "subprocess_serve_threads": 2,
+        "lock_exclusive_only_at_snapshot_and_swap": locks_ok,
+        "exclusive_hold_ms_in_thread": maintained["rwlock"][
+            "write_held_ms"
+        ],
+        "exclusive_hold_ms_subprocess": maintained_sub["rwlock"][
+            "write_held_ms"
+        ],
+        # the exclusive window around the swap itself — the number the
+        # rw-lock + subprocess protocol shrinks on ANY host (the child
+        # compacts outside the lock and outside the process, so the
+        # parent's write side covers only the final tail replay + flip)
+        "swap_exclusive_ms_in_thread": maintained.get("swap_ms"),
+        "swap_exclusive_ms_subprocess": maintained_sub.get("swap_ms"),
+        "cpu_caveat": (
+            "the p99 A/B needs >=2 host cores to show the isolation "
+            "win: with one core the compactor child pays interpreter + "
+            "jax startup per cycle AND timeshares the serving core, so "
+            "its longer compact window inflates p99 instead of freeing "
+            "it.  The structural guarantee holds regardless (asserted "
+            "above): the serve lock is exclusive only at snapshot + "
+            "swap, and in both modes the exclusive swap window covers "
+            "only the final WAL tail + pointer flip — independent of "
+            "how long the compact itself ran, because compaction and "
+            "catch-up replay happen outside the lock."
         ),
     }
     # Observability acceptance block: obs tax on the request path,
@@ -418,9 +512,18 @@ def _worker(smoke: bool) -> dict:
         ),
     }
     print(f"\np99 ratios vs baseline: request churn={ratio_churn:.2f}x "
-          f"maintained={ratio_maintained:.2f}x | search "
-          f"churn={s_ratio_churn:.2f}x maintained={s_ratio_maintained:.2f}x "
+          f"maintained={ratio_maintained:.2f}x subprocess={ratio_sub:.2f}x "
+          f"| search churn={s_ratio_churn:.2f}x "
+          f"maintained={s_ratio_maintained:.2f}x "
+          f"subprocess={s_ratio_sub:.2f}x "
           f"(target: maintained <= 2x)", flush=True)
+    rc = result["reader_concurrency"]
+    print(f"reader concurrency: search p99 in-thread="
+          f"{rc['in_thread_search_p99_ms']:.1f}ms subprocess="
+          f"{rc['subprocess_search_p99_ms']:.1f}ms "
+          f"(improves={rc['subprocess_search_p99_improves']}), lock "
+          f"exclusive only at snapshot+swap="
+          f"{rc['lock_exclusive_only_at_snapshot_and_swap']}", flush=True)
     ob = result["observability"]
     print(f"obs: p50 {ob['request_p50_ms_obs_off']:.1f}ms -> "
           f"{ob['request_p50_ms_obs_on']:.1f}ms "

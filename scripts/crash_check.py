@@ -23,7 +23,14 @@ makes "any instant" concrete.  Per scenario:
 Scenarios: ``mutable`` (single-device LSM), ``sharded`` (4-shard index
 on 8 virtual CPU devices; curve-routed appends), ``engine`` (writes +
 forced maintenance cycles through the serving engine — kills land
-inside the compact/replay/swap protocol).
+inside the compact/replay/swap protocol), ``compactor`` (the engine in
+``compaction="subprocess"`` mode: the kill lands in the GRAND-child —
+the out-of-process compactor — and the serving process must survive it:
+the cycle fails, nothing swaps, results stay bit-equal to pre-maintenance,
+and a disarmed retry succeeds.  Arming crosses the process boundary via
+``REPRO_COMPACTOR_FAULTS`` / ``REPRO_COMPACTOR_FAULT_TRACE``, so the
+workload child itself is never killed — exit 0 + DONE is the expected
+outcome of every kill run in this lane.)
 
 The parent stays import-light (no jax); children re-exec this file.
 
@@ -67,6 +74,11 @@ OPS_ENGINE = [
     ("insert", 24), ("insert", 16), ("save",), ("insert", 12),
     ("delete", (3, 7, 30)), ("maint",), ("insert", 10),
     ("delete", (0, 41)), ("maint",), ("insert", 8),
+]
+OPS_COMPACTOR = [
+    ("insert", 24), ("insert", 16), ("delete", (3, 7, 11)),
+    ("maint",), ("insert", 12), ("delete", (0, 20)),
+    ("maint",), ("insert", 10),
 ]
 
 
@@ -189,6 +201,91 @@ def child_run(scenario: str, workdir: str) -> None:
         _apply(cur, engine, ckpt, i, op)
         _ack(acks, i)
     print("DONE")
+
+
+def child_run_compactor(workdir: str) -> None:
+    """Serving engine in subprocess-compaction mode under an armed kill.
+
+    When ``REPRO_COMPACTOR_FAULTS`` is set, the FIRST forced maintenance
+    cycle's compactor child dies at the armed point; this process (the
+    serving parent) must observe a failed cycle and nothing else: same
+    epoch, same index object, bit-equal search results, replay log
+    closed.  Disarming and retrying must then succeed — the exact
+    backoff-and-retry path the maintainer thread takes.
+    """
+    import numpy as np
+
+    from repro.serve.engine import (
+        CompactionChildError,
+        MaintenancePolicy,
+        MaintenanceTimeout,
+        RetrievalEngine,
+    )
+
+    acks = os.path.join(workdir, "acks.jsonl")
+    armed = bool(os.environ.get("REPRO_COMPACTOR_FAULTS"))
+    idx = _fresh_index("mutable")
+    engine = RetrievalEngine(
+        idx, _params(),
+        maintenance=MaintenancePolicy(),
+        compaction="subprocess",
+        compaction_dir=os.path.join(workdir, "compact"),
+        start=False,            # synchronous: deterministic fault hits
+    )
+    need_kill = armed
+    for i, op in enumerate(OPS_COMPACTOR):
+        if op[0] == "maint" and need_kill:
+            pre_epoch = engine.epoch
+            pre_index = engine.index
+            qi, qd = (np.asarray(x) for x in engine.search(_queries()))
+            try:
+                engine.maintain_once(force=True)
+                raise SystemExit(
+                    "armed compactor kill did not fail the cycle"
+                )
+            except (CompactionChildError, MaintenanceTimeout) as e:
+                print(f"cycle failed as armed: {type(e).__name__}: {e}")
+            # the failed cycle must be invisible to serving
+            assert engine.epoch == pre_epoch, "epoch moved on failed cycle"
+            assert engine.index is pre_index, "index swapped on failed cycle"
+            assert engine._write_log is None, "replay log left open"
+            ri, rd = (np.asarray(x) for x in engine.search(_queries()))
+            assert np.array_equal(qi, ri) and np.array_equal(qd, rd), (
+                "results drifted across a failed maintenance cycle"
+            )
+            # disarm + retry: the maintainer's backoff path in miniature
+            os.environ.pop("REPRO_COMPACTOR_FAULTS", None)
+            need_kill = False
+            assert engine.maintain_once(force=True), "disarmed retry no-op"
+            assert engine.epoch == pre_epoch + 1
+            _ack(acks, i)
+            continue
+        _apply(engine.index, engine, None, i, op)
+        _ack(acks, i)
+    engine.index.save(os.path.join(workdir, "final"))
+    print("DONE")
+
+
+def child_verify_compactor(workdir: str) -> None:
+    """Full-ledger verification of the survivor's final saved state."""
+    import numpy as np
+
+    from repro.index.mutable import MutableHilbertIndex
+
+    rec = MutableHilbertIndex.load(os.path.join(workdir, "final"))
+    nid, dead, values = _ledger_state(OPS_COMPACTOR)
+    assert rec._lsm.next_id == nid, (rec._lsm.next_id, nid)
+    alive = np.ones(nid, np.bool_)
+    alive[sorted(dead & set(range(nid)))] = False
+    assert np.array_equal(np.asarray(rec._lsm.alive[:nid]), alive)
+    got = np.asarray(rec._lsm.values[:nid])
+    want = np.asarray([values[i] for i in range(nid)], got.dtype)
+    assert np.array_equal(got, want)
+    ids, _ = rec.search(_queries(), _params())
+    ids = np.asarray(ids)
+    valid = ids[ids >= 0]
+    assert alive[valid].all(), "search returned a tombstoned id"
+    print(f"VERIFIED full-ledger n_ops={len(OPS_COMPACTOR)}")
 
 
 def _ack(path: str, i: int) -> None:
@@ -315,6 +412,8 @@ def _child_env(scenario: str, **extra) -> dict:
     env = dict(os.environ)
     env.pop("REPRO_FAULTS", None)
     env.pop("REPRO_FAULT_TRACE", None)
+    env.pop("REPRO_COMPACTOR_FAULTS", None)
+    env.pop("REPRO_COMPACTOR_FAULT_TRACE", None)
     env["JAX_PLATFORMS"] = "cpu"
     if scenario == "sharded":
         env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
@@ -332,13 +431,26 @@ def _run(cmd, env, timeout=600):
 def run_battery(scenarios, point_filter, keep: bool) -> int:
     failures = []
     for scenario in scenarios:
+        # the compactor lane kills the GRAND-child (the out-of-process
+        # compactor): arming crosses the process boundary via the
+        # REPRO_COMPACTOR_* channel, and the workload child is expected
+        # to SURVIVE every kill (exit 0 + DONE), proving the serving
+        # process shrugs the dead compactor off
+        grandchild = scenario == "compactor"
+        trace_key = (
+            "REPRO_COMPACTOR_FAULT_TRACE" if grandchild
+            else "REPRO_FAULT_TRACE"
+        )
+        fault_key = (
+            "REPRO_COMPACTOR_FAULTS" if grandchild else "REPRO_FAULTS"
+        )
         root = tempfile.mkdtemp(prefix=f"crash_{scenario}_")
         trace_dir = os.path.join(root, "trace")
         os.makedirs(trace_dir)
         trace_file = os.path.join(trace_dir, "trace.txt")
         print(f"[{scenario}] trace pass ...", flush=True)
         r = _run(_child_cmd("run", scenario, trace_dir),
-                 _child_env(scenario, REPRO_FAULT_TRACE=trace_file))
+                 _child_env(scenario, **{trace_key: trace_file}))
         if r.returncode != 0 or "DONE" not in r.stdout:
             print(r.stdout[-2000:] + r.stderr[-2000:])
             failures.append((scenario, "<trace>", "trace pass failed"))
@@ -354,18 +466,38 @@ def run_battery(scenarios, point_filter, keep: bool) -> int:
             # wal.*/ckpt.* windows are already covered by the plain-index
             # matrices; the engine lane targets the swap protocol itself
             points = [p for p in points if p.startswith("engine.")]
+        if grandchild:
+            # the compactor lane targets the child protocol's own
+            # windows; the ckpt.* save/load machinery the child also
+            # crosses is covered by the plain-index matrices
+            points = [p for p in points if p.startswith("compactor.")]
         if point_filter:
             points = [p for p in points if any(s in p for s in point_filter)]
         print(f"[{scenario}] {len(points)} fault points: "
               + ", ".join(f"{p} x{hits[p]}" for p in points), flush=True)
-        for point, hit in [(p, h) for p in points
-                           for h in sorted({max(1, hits[p] // 2), hits[p]})]:
+        # hit counters are per-process: every compactor child starts
+        # fresh, so only hit=1 can fire in the grand-child lane
+        matrix = [
+            (p, h) for p in points
+            for h in ([1] if grandchild
+                      else sorted({max(1, hits[p] // 2), hits[p]}))
+        ]
+        for point, hit in matrix:
             wd = os.path.join(root, f"{point.replace('.', '_')}_{hit}")
             os.makedirs(wd)
             plan = f"{point}@{hit}=kill"
             r = _run(_child_cmd("run", scenario, wd),
-                     _child_env(scenario, REPRO_FAULTS=plan))
-            if r.returncode != -signal.SIGKILL:
+                     _child_env(scenario, **{fault_key: plan}))
+            if grandchild:
+                if r.returncode != 0 or "DONE" not in r.stdout:
+                    failures.append((scenario, point,
+                                     "serving child did not survive the "
+                                     f"compactor kill (rc={r.returncode}): "
+                                     + r.stdout[-300:] + r.stderr[-300:]))
+                    print(f"  [{scenario}] {plan:<44} PARENT DIED",
+                          flush=True)
+                    continue
+            elif r.returncode != -signal.SIGKILL:
                 failures.append((scenario, point,
                                  f"child not killed (rc={r.returncode}); "
                                  "fault point never reached?"))
@@ -401,7 +533,7 @@ def main() -> int:
                     help=argparse.SUPPRESS)
     ap.add_argument("--workdir", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--scenario", action="append", default=None,
-                    choices=["mutable", "sharded", "engine"],
+                    choices=["mutable", "sharded", "engine", "compactor"],
                     help="restrict to these scenarios (default: all)")
     ap.add_argument("--point", action="append", default=None,
                     help="substring filter on fault-point names")
@@ -412,13 +544,19 @@ def main() -> int:
     args = ap.parse_args()
     if args.child:
         scenario = (args.scenario or ["mutable"])[0]
-        if args.child == "run":
+        if scenario == "compactor":
+            if args.child == "run":
+                child_run_compactor(args.workdir)
+            else:
+                child_verify_compactor(args.workdir)
+        elif args.child == "run":
             child_run(scenario, args.workdir)
         else:
             child_verify(scenario, args.workdir)
         return 0
     scenarios = args.scenario or (
-        ["mutable"] if args.quick else ["mutable", "sharded", "engine"]
+        ["mutable"] if args.quick else
+        ["mutable", "sharded", "engine", "compactor"]
     )
     return run_battery(scenarios, args.point or [], args.keep)
 

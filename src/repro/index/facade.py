@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import time
 from collections import OrderedDict
 from typing import Dict, Optional, Tuple
@@ -96,33 +97,53 @@ class BoundedJitCache:
     eviction at ``max_entries``, where a ``get`` hit refreshes recency.
     Eviction drops our reference to the closure; XLA frees the
     executable when the last reference dies.
+
+    Thread-safe: the serving engine runs searches under a SHARED
+    reader-writer lock, so concurrent readers hit this cache together.
+    ``get``/``put`` are atomic under an internal mutex (a ``get`` hit
+    mutates LRU recency — the one read-path mutation the facades keep,
+    made safe here rather than pushed onto every caller).  Two racing
+    misses may both compile; both closures are equivalent and the loser
+    is simply dropped by ``put``'s overwrite.
     """
 
     def __init__(self, max_entries: int = 32):
         if max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self.max_entries = max_entries
+        self._lock = threading.Lock()
         self._entries: "OrderedDict[tuple, object]" = OrderedDict()
 
     def get(self, key):
-        fn = self._entries.get(key)
-        if fn is not None:
-            self._entries.move_to_end(key)
-        return fn
+        with self._lock:
+            fn = self._entries.get(key)
+            if fn is not None:
+                self._entries.move_to_end(key)
+            return fn
 
     def put(self, key, fn) -> None:
-        while len(self._entries) >= self.max_entries:
-            self._entries.popitem(last=False)
-        self._entries[key] = fn
+        with self._lock:
+            while len(self._entries) >= self.max_entries:
+                self._entries.popitem(last=False)
+            self._entries[key] = fn
 
     def clear(self) -> None:
-        self._entries.clear()
+        with self._lock:
+            self._entries.clear()
+
+    def keys(self) -> tuple:
+        """Key-set snapshot (purity tests fingerprint THIS, not recency
+        order — LRU refresh on a hit is deliberate and benign)."""
+        with self._lock:
+            return tuple(self._entries.keys())
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
 
 def resolve_backend(backend: str) -> str:

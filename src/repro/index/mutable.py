@@ -596,13 +596,43 @@ class MutableHilbertIndex(WalFacade):
 
     def _segment_dead(self, seg: Segment) -> int:
         """Tombstone count among a segment's REAL rows, cached between
-        deletes (pow2 padding duplicates are accounted separately)."""
+        deletes (pow2 padding duplicates are accounted separately).
+
+        Safe under the engine's SHARED read lock: deletes (the only thing
+        that moves ``_delete_epoch``) hold the write side, so concurrent
+        readers can at worst race an identical idempotent fill — and the
+        cache value is written BEFORE the epoch stamp, so a reader that
+        observes the fresh epoch always reads the fresh count.
+        """
         if seg.dead_epoch != self._delete_epoch:
             seg.dead_cache = seg.n_real - int(
                 np.count_nonzero(self._alive[seg.ids[: seg.n_real]])
             )
             seg.dead_epoch = self._delete_epoch
         return seg.dead_cache
+
+    def rewrite_pressure(self, params: Optional[SearchParams] = None) -> int:
+        """Segments so tombstoned that dead rows can crowd live neighbors
+        out of the stage-2 candidate pool under ``params``.
+
+        This is the condition that used to trigger a rewrite INSIDE
+        ``search()``.  The serving engine searches with
+        ``allow_rewrite=False`` (its read path must not mutate under the
+        shared read lock), so the same condition is surfaced here as a
+        maintenance trigger instead: a nonzero pressure trips
+        :class:`~repro.serve.engine.MaintenancePolicy` and the maintainer
+        compacts off the query path.
+        """
+        if params is None:
+            params = SearchParams()
+        cap = params.k2 * (2 * params.h + 1)
+        n = 0
+        for seg in list(self.segments):
+            dead = self._segment_dead(seg)
+            need = (params.k + dead) * (2 if seg.n_pad else 1)
+            if dead > 0 and need > cap and seg.index.points is not None:
+                n += 1
+        return n
 
     # -- segment lifecycle ---------------------------------------------------
 
@@ -769,6 +799,7 @@ class MutableHilbertIndex(WalFacade):
         *,
         backend: str = "auto",
         query_chunk: Optional[int] = None,
+        allow_rewrite: bool = True,
     ) -> Tuple[jax.Array, jax.Array]:
         """Fan-out Algorithm-1 top-k over buffer + segments, merged exactly.
 
@@ -780,6 +811,11 @@ class MutableHilbertIndex(WalFacade):
           backend: kernel routing for the segment searches.
           query_chunk: per-dispatch chunk cap (default
             ``config.query_chunk``).
+          allow_rewrite: permit read-triggered compaction (below).  The
+            serving engine passes ``False``: its searches run under a
+            SHARED read lock, so the read path must not mutate segments —
+            the same condition is surfaced via :meth:`rewrite_pressure`
+            and handled by the maintainer off the query path instead.
 
         Returns (ids (Q, k), sq-distances (Q, k)) like ``HilbertIndex.search``
         but with **external** ids; when fewer than k live points exist the
@@ -791,7 +827,8 @@ class MutableHilbertIndex(WalFacade):
         results — up to the stage-2 candidate pool (``k2*(2h+1)``).  A
         segment tombstoned past that bound is rewritten on the spot
         (read-triggered compaction) when it stores raw points; without
-        stored points its recall degrades until the ids are reinserted.
+        stored points (or with ``allow_rewrite=False``) its recall
+        degrades until it is compacted or the ids are reinserted.
         """
         if params is None:
             params = SearchParams()
@@ -808,7 +845,8 @@ class MutableHilbertIndex(WalFacade):
             # candidate slots to guarantee the same count of DISTINCT live
             # results; unpadded segments keep the historical k + dead.
             need = (k + dead) * (2 if seg.n_pad else 1)
-            if dead > 0 and need > cap and seg.index.points is not None:
+            if (allow_rewrite and dead > 0 and need > cap
+                    and seg.index.points is not None):
                 # So many tombstones that dead candidates could crowd live
                 # neighbors out of the stage-1/2 candidate pools (k can no
                 # longer be inflated past the pool size).  Read-triggered

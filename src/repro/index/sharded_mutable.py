@@ -814,7 +814,13 @@ class ShardedMutableHilbertIndex(WalFacade):
     # -- search --------------------------------------------------------------
 
     def _segment_dead_max(self, seg: ShardedSegment) -> int:
-        """Worst per-shard tombstone count (padding dups included), cached."""
+        """Worst per-shard tombstone count (padding dups included), cached.
+
+        Safe under the engine's SHARED read lock: deletes hold the write
+        side, so the epoch cannot move mid-read; racing readers perform
+        an identical idempotent fill (value written before the epoch
+        stamp, so a fresh epoch always pairs with a fresh count).
+        """
         if seg.dead_epoch != self._lsm.delete_epoch:
             alive = self._lsm.alive
             seg.dead_cache = max(
@@ -824,27 +830,60 @@ class ShardedMutableHilbertIndex(WalFacade):
             seg.dead_epoch = self._lsm.delete_epoch
         return seg.dead_cache
 
+    def rewrite_pressure(self, params: Optional[SearchParams] = None) -> int:
+        """Generations whose tombstones exceed their stage-2 candidate
+        pool under ``params`` — the read-triggered-rewrite condition,
+        surfaced as a maintenance trigger for engines that search with
+        ``allow_rewrite=False`` (shared read lock: the read path must
+        not rebuild segments).  Mirrors the single-device facade.
+        """
+        if params is None:
+            params = SearchParams()
+        n = 0
+        for seg in list(self.segments):
+            cap = params.k2 * min(2 * params.h + 1, seg.n_pad)
+            if (self._segment_dead_max(seg) > max(cap - params.k, 0)
+                    and seg.points is not None):
+                n += 1
+        return n
+
     def _alive_device(self) -> Tuple[int, jax.Array]:
-        """The alive mask padded to a pow2 capacity, replicated on device."""
+        """The alive mask padded to a pow2 capacity, replicated on device.
+
+        Lock-free-safe lazy mirror: invalidation happens only in
+        write-exclusive mutators (the key embeds the delete epoch and id
+        cursor), concurrent readers may at worst both ``device_put`` the
+        SAME mask (the loser's array is dropped), and the value is
+        published before the key so a reader that observes a fresh key
+        never pairs it with a stale array.  Readers work off locals —
+        ``self`` is re-read once, not per use.
+        """
         cap = max(1024, _pow2_ceil(self._lsm.next_id))
         key = (cap, self._lsm.delete_epoch, self._lsm.next_id)
-        if self._alive_key != key:
+        dev = self._alive_dev
+        if self._alive_key != key or dev is None:
             pad = np.zeros((cap,), np.bool_)
             pad[: self._lsm.next_id] = self._lsm.alive
-            self._alive_dev = jax.device_put(
+            dev = jax.device_put(
                 jnp.asarray(pad), NamedSharding(self.mesh, P())
             )
+            self._alive_dev = dev   # value BEFORE key: see docstring
             self._alive_key = key
-        return cap, self._alive_dev
+        return cap, dev
 
     def _device_buffers(self) -> Tuple[jax.Array, jax.Array]:
-        if self._dev_buf is None:
+        # same lazy-mirror discipline as _alive_device: read into a local,
+        # fill idempotently; writers invalidate by assigning None under
+        # the engine's exclusive lock
+        buf = self._dev_buf
+        if buf is None:
             data_sh = NamedSharding(self.mesh, P("data"))
-            self._dev_buf = (
+            buf = (
                 jax.device_put(jnp.asarray(self._buf_pts), data_sh),
                 jax.device_put(jnp.asarray(self._buf_ids), data_sh),
             )
-        return self._dev_buf
+            self._dev_buf = buf
+        return buf
 
     def search(
         self,
@@ -855,6 +894,7 @@ class ShardedMutableHilbertIndex(WalFacade):
         query_chunk: Optional[int] = None,
         merge: Optional[str] = None,
         prune: Optional[bool] = None,
+        allow_rewrite: bool = True,
     ) -> Tuple[jax.Array, jax.Array]:
         """Mesh-wide streaming search; returns (ext ids (Q, k), sq-dists).
 
@@ -871,7 +911,11 @@ class ShardedMutableHilbertIndex(WalFacade):
 
         A generation tombstoned past its stage-2 candidate pool is
         rewritten on the spot (read-triggered shard-local compaction),
-        mirroring the single-device mutable index.
+        mirroring the single-device mutable index.  ``allow_rewrite=False``
+        suppresses that rewrite (the serving engine's shared-read-lock
+        path: see :meth:`rewrite_pressure`) at the cost of degraded
+        recall on the over-tombstoned generation until maintenance
+        compacts it.
         """
         if params is None:
             params = SearchParams()
@@ -884,6 +928,7 @@ class ShardedMutableHilbertIndex(WalFacade):
             query_chunk = self.config.query_chunk
         q = jnp.asarray(queries)
         qn, k = q.shape[0], params.k
+        dispatches = 0
         self.last_dispatch_count = 0
         if qn == 0 or self._dim is None or (
             not self.segments and self.n_buffered == 0
@@ -894,12 +939,14 @@ class ShardedMutableHilbertIndex(WalFacade):
             )
         # Read-triggered rewrite: a generation whose tombstones could crowd
         # live neighbors out of its candidate pool is rebuilt (shard-local,
-        # dead rows dropped for good) before this search runs.
-        for seg in list(self.segments):
-            cap = params.k2 * min(2 * params.h + 1, seg.n_pad)
-            if (self._segment_dead_max(seg) > max(cap - k, 0)
-                    and seg.points is not None):
-                self._merge_segments([seg])
+        # dead rows dropped for good) before this search runs.  Suppressed
+        # on the engine's shared-read-lock path (allow_rewrite=False).
+        if allow_rewrite:
+            for seg in list(self.segments):
+                cap = params.k2 * min(2 * params.h + 1, seg.n_pad)
+                if (self._segment_dead_max(seg) > max(cap - k, 0)
+                        and seg.points is not None):
+                    self._merge_segments([seg])
         # Per-generation k inflation: padding dups + a pow2 bucket of the
         # worst tombstone count (bucketed so deletes only retrace the
         # dispatch log-many times).
@@ -936,11 +983,15 @@ class ShardedMutableHilbertIndex(WalFacade):
             with dispatch_scope("sharded_mutable.search"):
                 ids, dists = fn(chunk, stacks, quants, perms, flips, bpts,
                                 bids, alive)
-            self.last_dispatch_count += 1
+            dispatches += 1
             if bucket > m:
                 ids, dists = ids[:m], dists[:m]
             outs_i.append(ids)
             outs_d.append(dists)
+        # one assignment at the end: last_dispatch_count is a diagnostic
+        # scalar, and concurrent readers should each publish a consistent
+        # per-call count rather than interleave increments
+        self.last_dispatch_count = dispatches
         return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
 
     def _chunk_fn(self, params: SearchParams, seg_meta: tuple,

@@ -1,6 +1,18 @@
+from repro.serve.batching import (  # noqa: F401
+    BatchPlan,
+    effective_deadline,
+    form_batch,
+)
+from repro.serve.compactor import (  # noqa: F401
+    CompactionChildError,
+    compact_in_child,
+)
 from repro.serve.engine import (  # noqa: F401
+    DeadlineExceeded,
     EngineClosed,
+    EngineDegraded,
     MaintenancePolicy,
+    MaintenanceTimeout,
     QueueFull,
     RetrievalEngine,
     SearchTicket,
@@ -12,3 +24,4 @@ from repro.serve.metrics import (  # noqa: F401
 )
 from repro.serve.pipeline import pipelined_search  # noqa: F401
 from repro.serve.retrieval import RetrievalStore, knn_lm_mix  # noqa: F401
+from repro.serve.rwlock import ReadWriteLock  # noqa: F401

@@ -9,13 +9,16 @@ query path, and the compiled-dispatch cache must be hit by construction.
 (plain / mutable / sharded / sharded-mutable — anything with
 ``search(queries, params, backend=, query_chunk=)``):
 
-* **Admission + micro-batching** — :meth:`submit` places a request in a
-  BOUNDED queue (backpressure: ``block=False`` raises :class:`QueueFull`
-  when the deployment is saturated, instead of unbounded memory growth).
-  The serve loop drains the queue into micro-batches of up to
-  ``max_batch`` rows sharing one :class:`SearchParams`, concatenates them
-  into one search, and splits results back per request.  Batches cap at
-  the facade's ``query_chunk``, whose pow2 bucket padding then guarantees
+* **Admission + EDF micro-batching** — :meth:`submit` places a request
+  in a BOUNDED queue (backpressure: ``block=False`` raises
+  :class:`QueueFull` when the deployment is saturated, instead of
+  unbounded memory growth).  The serve loop forms micro-batches
+  earliest-deadline-first (the pure
+  :func:`repro.serve.batching.form_batch` — deadline-less tickets age
+  under a fairness horizon, so nothing starves) of up to ``max_batch``
+  rows sharing one :class:`SearchParams`, concatenates them into one
+  search, and splits results back per request.  Batches cap at the
+  facade's ``query_chunk``, whose pow2 bucket padding then guarantees
   at most ``log2(query_chunk)+1`` compiled shapes — the dispatch cache is
   hit by construction, never by luck.
 * **Pipelined retrieval** — multi-chunk batches run through
@@ -42,6 +45,10 @@ Determinism for tests: construct with ``start=False`` and drive
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import shutil
+import subprocess
+import tempfile
 import threading
 import time
 from collections import deque
@@ -56,11 +63,15 @@ from repro.index.facade import _pow2_bucket
 from repro.obs.recall import RecallProbe, RecallProbeConfig
 from repro.obs.registry import default_registry
 from repro.obs.trace import span
+from repro.serve.batching import form_batch
+from repro.serve.compactor import CompactionChildError, compact_in_child
 from repro.serve.metrics import EngineMetrics
 from repro.serve.pipeline import pipelined_search
+from repro.serve.rwlock import ReadWriteLock
 from repro.testing.faults import fault_point
 
 __all__ = [
+    "CompactionChildError",
     "DeadlineExceeded",
     "EngineClosed",
     "EngineDegraded",
@@ -138,10 +149,15 @@ class MaintenancePolicy:
             return False
         if stats.get("mergeable_segments", 0) < 1:
             return False  # store_points=False: nothing can be re-sorted
+        # rewrite_pressure: segments tombstoned past their candidate pool.
+        # The facades used to rewrite these INSIDE search(); the engine's
+        # shared-read-lock path suppresses that (reads must not mutate),
+        # so the same condition triggers maintenance here instead.
         return (
             int(stats.get("n_segments", 0)) > self.max_segments
             or float(stats.get("tombstone_ratio", 0.0))
             > self.max_tombstone_ratio
+            or int(stats.get("rewrite_pressure", 0)) > 0
         )
 
 
@@ -157,14 +173,23 @@ class SearchTicket:
     ``deadline`` (a ``time.monotonic()`` instant, or None) marks when the
     caller stops caring: a ticket still queued past it is failed with
     :class:`DeadlineExceeded` at batch-formation time instead of being
-    dispatched.
+    dispatched.  ``submitted_mono`` (same clock) plus ``seq`` (global
+    admission order) are what the EDF batcher
+    (:func:`repro.serve.batching.form_batch`) schedules on: deadline-less
+    tickets age from ``submitted_mono``, and ``seq`` breaks deadline
+    ties deterministically.
     """
 
+    _seq_counter = itertools.count()
+
     def __init__(self, queries: np.ndarray, params: SearchParams,
-                 deadline: Optional[float] = None):
+                 deadline: Optional[float] = None,
+                 seq: Optional[int] = None):
         self.queries = queries
         self.params = params
         self.deadline = deadline
+        self.seq = next(self._seq_counter) if seq is None else seq
+        self.submitted_mono = time.monotonic()
         self.submitted_at = time.perf_counter()
         self.batched_at: Optional[float] = None
         self.completed_at: Optional[float] = None
@@ -271,14 +296,36 @@ class RetrievalEngine:
         maintainer thread scores between cycles, or call
         :meth:`score_recall` in step mode.  ``None`` (default) disables
         probing entirely.
+      compaction: where the shadow ``compact()`` runs.  ``"thread"``
+        (default) compacts on a helper thread inside this process;
+        ``"subprocess"`` hands the snapshot to a CHILD process via the
+        format_version-5 bundles (:mod:`repro.serve.compactor`) so
+        maintenance never touches the serving process's cores or GIL —
+        the child saves, the parent verifies and reloads, and the
+        existing replay + swap protocol continues unchanged.
+      compaction_dir: workdir for subprocess compaction bundles
+        (default: a fresh temp dir per cycle, removed afterwards).
+      edf_horizon_s: fairness horizon for deadline-less requests — their
+        effective deadline is submission + this, which bounds how long a
+        stream of urgent arrivals can delay them (see
+        :mod:`repro.serve.batching`).
+      serve_threads: number of serve-loop workers.  More than one lets
+        micro-batches EXECUTE concurrently under the shared read lock
+        (useful when batches are small and host-bound); results stay
+        per-ticket deterministic regardless.
       start: spawn the serve (+ maintainer) threads immediately.  With
         ``start=False`` the engine is in deterministic step mode: drive
         :meth:`step` and :meth:`maintain_once` by hand.
 
-    All index access is serialized on one internal lock — LSM facades are
-    not thread-safe, so searches, writes, replay, and swap take turns; the
-    expensive shadow ``compact()`` is the one maintenance phase that runs
-    OUTSIDE the lock (that is the whole point).  Used as a context
+    Index access takes a READER-WRITER lock: searches (and other pure
+    reads) share it, while ``insert``/``delete``, the maintenance
+    snapshot and the epoch swap hold it exclusively — possible because
+    the facades' read paths are mutation-free under concurrency (the
+    engine searches with ``allow_rewrite=False``; lazy caches are
+    idempotent fills).  The expensive shadow ``compact()`` runs with NO
+    lock held (in-thread or in a child process — that is the whole
+    point).  Lock hierarchy: state lock < serve-read < serve-write <
+    maintenance mutex; see ``docs/SERVING.md``.  Used as a context
     manager, ``__exit__`` performs a draining :meth:`stop`.
     """
 
@@ -294,6 +341,10 @@ class RetrievalEngine:
         maintenance: Optional[MaintenancePolicy] = MaintenancePolicy(),
         recall: Optional[Any] = None,
         default_deadline_ms: Optional[float] = None,
+        compaction: str = "thread",
+        compaction_dir: Optional[str] = None,
+        edf_horizon_s: float = 60.0,
+        serve_threads: int = 1,
         start: bool = False,
     ):
         if max_queue < 1:
@@ -301,6 +352,19 @@ class RetrievalEngine:
         if default_deadline_ms is not None and default_deadline_ms <= 0:
             raise ValueError(
                 f"default_deadline_ms must be > 0, got {default_deadline_ms}"
+            )
+        if compaction not in ("thread", "subprocess"):
+            raise ValueError(
+                f"compaction must be 'thread' or 'subprocess', "
+                f"got {compaction!r}"
+            )
+        if serve_threads < 1:
+            raise ValueError(
+                f"serve_threads must be >= 1, got {serve_threads}"
+            )
+        if edf_horizon_s <= 0:
+            raise ValueError(
+                f"edf_horizon_s must be > 0, got {edf_horizon_s}"
             )
         self.params = params or SearchParams()
         self.default_deadline_ms = default_deadline_ms
@@ -323,11 +387,31 @@ class RetrievalEngine:
                 "recall must be a RecallProbeConfig or RecallProbe, got "
                 f"{type(recall).__name__}"
             )
+        self.compaction = compaction
+        self.compaction_dir = compaction_dir
+        self.edf_horizon_s = float(edf_horizon_s)
+        self.serve_threads = int(serve_threads)
+        # engine reads must not trigger segment rewrites: searches run
+        # under the SHARED lock side, so mutation is off the read path
+        # (the rewrite condition surfaces as maintenance `rewrite_pressure`)
+        self._search_kwargs = (
+            {"allow_rewrite": False}
+            if hasattr(index, "rewrite_pressure") else {}
+        )
         self.last_swap_timeline: Optional[Dict[str, Any]] = None
         self._register_gauges()
 
+        # Lock hierarchy (acquire left-to-right only):
+        #   _state_lock < serve-read < serve-write < _maint_lock
         self._state_lock = threading.Lock()   # epoch pointer + write log
-        self._serve_lock = threading.RLock()  # every index operation
+        reg = default_registry()
+        _rw_read = reg.latency("engine_rwlock_read_wait_ms", capacity=4096)
+        _rw_write = reg.latency("engine_rwlock_write_wait_ms", capacity=4096)
+        self._serve_lock = ReadWriteLock(     # searches share, writes exclude
+            observer=lambda kind, ms: (
+                _rw_write if kind == "write" else _rw_read
+            ).record(ms)
+        )
         self._maint_lock = threading.Lock()   # one maintenance cycle at a time
         # one representative batch per (params, pow2 dispatch bucket) seen,
         # so maintenance pre-warms the shadow for EVERY bucket live traffic
@@ -342,7 +426,7 @@ class RetrievalEngine:
         self._cv = threading.Condition()
         self._pending: Deque[SearchTicket] = deque()
         self._closed = False
-        self._worker: Optional[threading.Thread] = None
+        self._workers: List[threading.Thread] = []
         self._maintainer: Optional[threading.Thread] = None
         self._stop_event = threading.Event()
         self.last_maintenance_error: Optional[BaseException] = None
@@ -399,6 +483,24 @@ class RetrievalEngine:
             fn=attr(lambda e: 1.0 if e._degraded_reason else 0.0),
         )
 
+        def lock_stat(key: str):
+            def read() -> float:
+                eng = wr()
+                lock = getattr(eng, "_serve_lock", None)
+                if lock is None:
+                    return float("nan")
+                return float(lock.stats().get(key, 0.0))
+            return read
+
+        # rw-lock contention: live reader count, queued writers, and the
+        # cumulative exclusive-hold time (how long writes/swaps actually
+        # kept readers out)
+        reg.gauge("engine_rwlock_readers", fn=lock_stat("readers"))
+        reg.gauge("engine_rwlock_pending_writers",
+                  fn=lock_stat("pending_writers"))
+        reg.gauge("engine_rwlock_write_held_ms",
+                  fn=lock_stat("write_held_ms"))
+
     # -- introspection -------------------------------------------------------
 
     @property
@@ -420,7 +522,7 @@ class RetrievalEngine:
 
     @property
     def running(self) -> bool:
-        return self._worker is not None and self._worker.is_alive()
+        return any(w.is_alive() for w in self._workers)
 
     @property
     def degraded(self) -> bool:
@@ -543,8 +645,12 @@ class RetrievalEngine:
         Raises :class:`EngineDegraded` (fast, before touching the index)
         when the engine is in degraded read-only mode, and ENTERS that
         mode if this write's WAL append fails.
+
+        Writes hold the serve lock EXCLUSIVELY: in-flight searches finish
+        first (they share the read side), and no search observes a
+        half-applied insert or a mid-seal segment list.
         """
-        with self._serve_lock:
+        with self._serve_lock.write_locked():
             index = self.index
             if not hasattr(index, "insert"):
                 raise TypeError(
@@ -572,7 +678,7 @@ class RetrievalEngine:
 
     def delete(self, ids) -> int:
         """Tombstone external ids on the serving index (logged like insert)."""
-        with self._serve_lock:
+        with self._serve_lock.write_locked():
             index = self.index
             if not hasattr(index, "delete"):
                 raise TypeError(
@@ -603,40 +709,45 @@ class RetrievalEngine:
             )
 
     def values_at(self, ids, fill=0):
-        """Per-point payload gather on the serving index (kNN-LM tokens)."""
-        with self._serve_lock:
+        """Per-point payload gather on the serving index (kNN-LM tokens).
+
+        A pure read: shares the lock with searches, excludes writes.
+        """
+        with self._serve_lock.read_locked():
             return self.index.values_at(ids, fill=fill)
 
     # -- the serve loop ------------------------------------------------------
 
     def _take_batch_locked(self) -> List[SearchTicket]:
-        """Pop a params-homogeneous run of requests up to ``max_batch`` rows.
+        """Form the next micro-batch earliest-deadline-first.
 
-        Caller holds ``self._cv``.  Requests keep arrival order; a request
-        with different params ends the batch (it leads the next one), so
-        heterogeneous params cost extra batches, never wrong results.
+        Caller holds ``self._cv``.  Scheduling policy lives in the pure
+        :func:`repro.serve.batching.form_batch` (the property-tested
+        piece); this method owns the side effects: expired tickets are
+        failed with :class:`DeadlineExceeded` BEFORE any dispatch, taken
+        + shed tickets leave the queue, and submitters blocked on a full
+        queue are woken.
         """
-        batch: List[SearchTicket] = []
-        rows = 0
-        while self._pending:
-            nxt = self._pending[0]
-            if nxt.expired:
-                # dropped BEFORE dispatch: stale work is shed, not served
-                self._pending.popleft()._fail(DeadlineExceeded(
-                    "request deadline passed while queued"
-                ))
-                self.metrics.bump("deadline_expired")
-                continue
-            if batch and (
-                nxt.params != batch[0].params
-                or rows + nxt.queries.shape[0] > self.max_batch
-            ):
-                break
-            batch.append(self._pending.popleft())
-            rows += nxt.queries.shape[0]
-        if batch:
-            self._cv.notify_all()  # wake submitters blocked on a full queue
-        return batch
+        plan = form_batch(
+            self._pending,
+            max_rows=self.max_batch,
+            now=time.monotonic(),
+            no_deadline_horizon=self.edf_horizon_s,
+        )
+        if not plan.batch and not plan.expired:
+            return []
+        taken = {id(t) for t in plan.batch} | {id(t) for t in plan.expired}
+        self._pending = deque(
+            t for t in self._pending if id(t) not in taken
+        )
+        for t in plan.expired:
+            # shed BEFORE dispatch: stale work is dropped, not served
+            t._fail(DeadlineExceeded(
+                "request deadline passed while queued"
+            ))
+            self.metrics.bump("deadline_expired")
+        self._cv.notify_all()  # wake submitters blocked on a full queue
+        return list(plan.batch)
 
     def _execute(self, batch: List[SearchTicket]) -> None:
         with self._state_lock:
@@ -653,13 +764,17 @@ class RetrievalEngine:
                       rows=int(q.shape[0]), epoch=ref.epoch):
                 m = min(q.shape[0], self.query_chunk)
                 warm_key = (params, _pow2_bucket(m, self.query_chunk))
-                if warm_key not in self._warm_queries:
-                    # retained so maintenance can pre-warm the shadow's
-                    # compiled dispatches for every dispatch bucket the
-                    # live traffic has hit
-                    self._warm_queries[warm_key] = q[:m].copy()
-                with self._serve_lock:
-                    # timed inside the lock: batch_latency is the search
+                with self._state_lock:
+                    if warm_key not in self._warm_queries:
+                        # retained so maintenance can pre-warm the shadow's
+                        # compiled dispatches for every dispatch bucket the
+                        # live traffic has hit (state-locked: serve workers
+                        # run this concurrently)
+                        self._warm_queries[warm_key] = q[:m].copy()
+                with self._serve_lock.read_locked():
+                    # SHARED side: concurrent batches (serve_threads > 1)
+                    # search together; writes/snapshot/swap exclude us.
+                    # Timed inside the lock: batch_latency is the search
                     # execution itself; queue + lock wait shows up in the
                     # per-ticket latency instead
                     t0 = time.perf_counter()
@@ -668,11 +783,13 @@ class RetrievalEngine:
                             ids, dists = pipelined_search(
                                 ref.index, q, params, backend=self.backend,
                                 query_chunk=self.query_chunk,
+                                **self._search_kwargs,
                             )
                         else:
                             ids, dists = ref.index.search(
                                 q, params, backend=self.backend,
                                 query_chunk=self.query_chunk,
+                                **self._search_kwargs,
                             )
                         ids = np.asarray(jax.device_get(ids))
                         dists = np.asarray(jax.device_get(dists))
@@ -729,26 +846,44 @@ class RetrievalEngine:
     # -- background maintenance + double-buffered swap -----------------------
 
     def maintenance_stats(self) -> Dict[str, Any]:
-        """The serving index's trigger signals (empty for static layouts)."""
-        with self._serve_lock:
+        """The serving index's trigger signals (empty for static layouts).
+
+        Adds ``rewrite_pressure`` (segments tombstoned past their
+        candidate pool under the engine's default params) — the condition
+        the facades used to fix by rewriting inside ``search()``, now a
+        maintenance trigger because the engine's read path must not
+        mutate (shared read lock).
+        """
+        with self._serve_lock.read_locked():
             index = self.index
             if not hasattr(index, "maintenance_stats"):
                 return {}
-            return index.maintenance_stats()
+            stats = index.maintenance_stats()
+            if hasattr(index, "rewrite_pressure"):
+                stats["rewrite_pressure"] = index.rewrite_pressure(
+                    self.params
+                )
+            return stats
 
     def maintain_once(self, force: bool = False) -> bool:
         """One full maintenance cycle; returns True iff an index swap
         happened.
 
-        Protocol (the serve lock is held ONLY for the cheap steps):
+        Protocol (the serve lock is held EXCLUSIVELY only for the cheap
+        steps — searches keep flowing through 2 and 3):
 
-        1. snapshot the serving index + open the write replay log  (lock)
-        2. ``compact()`` the shadow — the expensive part            (NO lock)
+        1. snapshot the serving index + open the write replay log  (write lock)
+        2. compact the shadow — in-thread or in a child process
+           (``compaction="subprocess"``), the expensive part        (NO lock)
         3. catch-up rounds: drain the log so far onto the shadow,
            then pre-warm the shadow's compiled dispatches with the
            batch shapes the serve loop has actually seen            (NO lock)
-        4. drain the final log tail, swap the pointer               (lock)
+        4. drain the final log tail, swap the pointer               (write lock)
         5. wait for the old epoch's in-flight refcount to drain
+
+        :attr:`last_swap_timeline` records ``*_locked`` booleans per
+        phase — the benchmark asserts from them that the lock was held
+        exclusively ONLY at snapshot and swap.
 
         Step 3 is what keeps the dispatch-cache promise across swaps: a
         compacted index has a different LSM shape (and replayed writes a
@@ -782,7 +917,11 @@ class RetrievalEngine:
         each replay round drained, and how long the serve lock was
         actually held for the final tail + pointer swap.
         """
-        timeline: Dict[str, Any] = {"log_depth": 0, "replay_rounds": 0}
+        timeline: Dict[str, Any] = {
+            "log_depth": 0,
+            "replay_rounds": 0,
+            "compaction": self.compaction,
+        }
 
         def clock(phase: str, t0: float) -> None:
             timeline[f"{phase}_ms"] = 1000.0 * (time.perf_counter() - t0)
@@ -791,12 +930,20 @@ class RetrievalEngine:
         cycle.__enter__()
         try:
             t0 = time.perf_counter()
-            with self._serve_lock, span("maint.snapshot"):
+            with self._serve_lock.write_locked(), span("maint.snapshot"):
+                # EXCLUSIVE: the snapshot + log-open must be atomic
+                # against writes (a write between them would be neither
+                # snapshotted nor logged = silently lost on swap)
+                timeline["snapshot_locked"] = self._serve_lock.write_held()
                 index = self.index
                 if not (hasattr(index, "snapshot")
                         and hasattr(index, "compact")):
                     return False
                 stats = index.maintenance_stats()
+                if hasattr(index, "rewrite_pressure"):
+                    stats["rewrite_pressure"] = index.rewrite_pressure(
+                        self.params
+                    )
                 policy = self.maintenance or MaintenancePolicy()
                 if not force and not policy.triggered(stats):
                     return False
@@ -810,8 +957,14 @@ class RetrievalEngine:
             fault_point("engine.maint.pre_compact")
             t0 = time.perf_counter()
             try:
-                self._compact_shadow(shadow, policy,
-                                     int(stats.get("n_segments", 0)))
+                # NO serve lock held: serving continues while the shadow
+                # compacts (in-thread or in a child process).  Subprocess
+                # mode returns a NEW object (the reloaded bundle).
+                timeline["compact_locked"] = self._serve_lock.write_held()
+                shadow = self._compact_shadow(
+                    shadow, policy, int(stats.get("n_segments", 0)),
+                    timeline,
+                )
             except BaseException:
                 with self._state_lock:
                     self._write_log = None
@@ -841,6 +994,7 @@ class RetrievalEngine:
             # will drain.
             fault_point("engine.maint.pre_replay")
             replay_ms = prewarm_ms = 0.0
+            timeline["replay_locked"] = self._serve_lock.write_held()
             try:
                 for _ in range(4):
                     with self._state_lock:
@@ -863,7 +1017,8 @@ class RetrievalEngine:
                     self._write_log = None
                 raise
             t0 = time.perf_counter()
-            with self._serve_lock, span("maint.swap"):
+            with self._serve_lock.write_locked(), span("maint.swap"):
+                timeline["swap_locked"] = self._serve_lock.write_held()
                 with self._state_lock:
                     log = self._write_log or []
                     self._write_log = None
@@ -907,20 +1062,35 @@ class RetrievalEngine:
             cycle.__exit__(None, None, None)
 
     def _compact_shadow(self, shadow, policy: MaintenancePolicy,
-                        n_segments: int) -> None:
-        """Run ``shadow.compact()`` under the ``max_cycle_s`` watchdog.
+                        n_segments: int,
+                        timeline: Optional[Dict[str, Any]] = None):
+        """Compact the shadow under the ``max_cycle_s`` watchdog; returns
+        the compacted shadow (a NEW object in subprocess mode).
 
-        The compact runs on a helper thread so a hang (wedged device,
-        pathological merge) can be ABANDONED: the serving index was never
-        touched, so dropping the shadow loses nothing but the cycle's
-        work.  The orphaned thread finishes (or hangs) against an object
-        nobody references anymore.  ``max_cycle_s=None`` compacts inline.
+        ``compaction="thread"``: the compact runs on a helper thread so a
+        hang (wedged device, pathological merge) can be ABANDONED — the
+        serving index was never touched, so dropping the shadow loses
+        nothing but the cycle's work.  The orphaned thread finishes (or
+        hangs) against an object nobody references anymore.
+        ``max_cycle_s=None`` compacts inline.
+
+        ``compaction="subprocess"``: the shadow is saved as a
+        format_version-5 bundle and compacted by a CHILD process
+        (:func:`repro.serve.compactor.compact_in_child`); the verified
+        result bundle is reloaded and returned.  A child that dies, hangs
+        past the watchdog, or produces an unverifiable bundle fails ONLY
+        this cycle (:class:`CompactionChildError` /
+        :class:`MaintenanceTimeout`); the maintainer backs off and
+        retries.
         """
         budget = policy.max_cycle_s
-        with span("maint.compact", segments=n_segments):
+        with span("maint.compact", segments=n_segments,
+                  mode=self.compaction):
+            if self.compaction == "subprocess":
+                return self._compact_in_subprocess(shadow, budget, timeline)
             if budget is None:
                 shadow.compact()
-                return
+                return shadow
             err: List[BaseException] = []
 
             def run() -> None:
@@ -941,6 +1111,38 @@ class RetrievalEngine:
                 )
             if err:
                 raise err[0]
+            return shadow
+
+    def _compact_in_subprocess(self, shadow, budget: Optional[float],
+                               timeline: Optional[Dict[str, Any]]):
+        """Hand the shadow to ``python -m repro.serve.compactor``."""
+        workdir = self.compaction_dir
+        scratch = None
+        if workdir is None:
+            scratch = tempfile.mkdtemp(prefix="repro-compact-")
+            workdir = scratch
+        try:
+            try:
+                compacted, phases = compact_in_child(
+                    shadow, workdir, timeout=budget,
+                    mesh=getattr(shadow, "mesh", None),
+                )
+            except subprocess.TimeoutExpired as e:
+                self.metrics.bump("maintenance_timeouts")
+                raise MaintenanceTimeout(
+                    f"compactor child exceeded {budget}s; shadow abandoned"
+                ) from e
+            reg = default_registry()
+            for key in ("save_in_ms", "child_ms", "load_out_ms"):
+                reg.latency(f"engine_maint_{key}", capacity=1024).record(
+                    float(phases.get(key, 0.0))
+                )
+            if timeline is not None:
+                timeline["compactor_phases"] = phases
+            return compacted
+        finally:
+            if scratch is not None:
+                shutil.rmtree(scratch, ignore_errors=True)
 
     def score_recall(self) -> int:
         """Score pending recall-probe batches (exact shadow, host math).
@@ -985,15 +1187,25 @@ class RetrievalEngine:
     # -- lifecycle -----------------------------------------------------------
 
     def start(self) -> "RetrievalEngine":
-        """Spawn the serve thread (+ maintainer when a policy is set)."""
+        """Spawn the serve worker(s) (+ maintainer when a policy is set).
+
+        ``serve_threads`` workers run the same loop over the shared
+        queue; with more than one, micro-batches execute concurrently
+        under the shared read side of the serve lock.
+        """
         if self.running:
             return self
         self._closed = False
         self._stop_event.clear()
-        self._worker = threading.Thread(
-            target=self._serve_loop, name="retrieval-serve", daemon=True
-        )
-        self._worker.start()
+        self._workers = [
+            threading.Thread(
+                target=self._serve_loop,
+                name=f"retrieval-serve-{i}", daemon=True,
+            )
+            for i in range(self.serve_threads)
+        ]
+        for w in self._workers:
+            w.start()
         want_maint = (
             self.maintenance is not None and hasattr(self.index, "snapshot")
         )
@@ -1037,11 +1249,11 @@ class RetrievalEngine:
                     "maintenance thread did not stop in time"
                 )
             self._maintainer = None
-        if self._worker is not None:
-            self._worker.join(timeout)
-            if self._worker.is_alive():
+        for w in self._workers:
+            w.join(timeout)
+            if w.is_alive():
                 raise TimeoutError("serve thread did not drain in time")
-            self._worker = None
+        self._workers = []
         # step-mode engines (never started) drain synchronously
         if drain:
             while self.step():

@@ -41,6 +41,7 @@ def pipelined_search(
     backend: str = "auto",
     query_chunk: Optional[int] = None,
     device: Optional[jax.Device] = None,
+    **search_kwargs,
 ) -> Tuple[jax.Array, jax.Array]:
     """Chunked search with host staging overlapped against device execution.
 
@@ -56,6 +57,10 @@ def pipelined_search(
       device: staging target for plain/mutable layouts (default device when
         ``None``).  Sharded layouts place queries themselves inside their
         search dispatch (replicated), so staging is a host-pinning step.
+      **search_kwargs: forwarded verbatim to every per-chunk
+        ``index.search`` call (e.g. the serving engine's
+        ``allow_rewrite=False`` on mutable layouts — its shared-read-lock
+        path must not mutate segments mid-pipeline).
 
     Returns:
       ``(ids (Q, k), sq_distances (Q, k))`` — bit-identical to
@@ -69,7 +74,8 @@ def pipelined_search(
     if qn == 0 or qn <= query_chunk:
         # One chunk: nothing to overlap, take the direct path.
         return index.search(
-            queries, params, backend=backend, query_chunk=query_chunk
+            queries, params, backend=backend, query_chunk=query_chunk,
+            **search_kwargs,
         )
     q_host = np.asarray(jax.device_get(queries), np.float32)
 
@@ -85,7 +91,8 @@ def pipelined_search(
         nxt = s + query_chunk
         # Dispatch the current chunk's search (async: returns futures) ...
         ids, dists = index.search(
-            staged, params, backend=backend, query_chunk=query_chunk
+            staged, params, backend=backend, query_chunk=query_chunk,
+            **search_kwargs,
         )
         # ... then stage the NEXT chunk while the device works on this one.
         if nxt < qn:

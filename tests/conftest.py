@@ -1,0 +1,48 @@
+"""Shared fixtures: a deadlock watchdog for the concurrency suite.
+
+A hung lock-ordering bug presents as a test that never finishes — in CI
+that is a 6-hour timeout with zero diagnostics.  ``deadlock_watchdog``
+arms :func:`faulthandler.dump_traceback_later`: if the test has not
+disarmed it within its budget, every thread's stack is dumped (to stderr
+and, when ``REPRO_FAULTHANDLER_DUMP`` names a file, to that file so CI
+can upload it as an artifact) and the process exits hard.  The dump IS
+the bug report: it shows exactly which threads hold/await which locks.
+"""
+
+import faulthandler
+import os
+
+import pytest
+
+
+@pytest.fixture
+def deadlock_watchdog():
+    """Arm a per-test wall-clock budget; dump all thread stacks on breach.
+
+    Usage::
+
+        def test_stress(deadlock_watchdog):
+            deadlock_watchdog(120.0)   # seconds
+            ... spawn threads, join them ...
+
+    Disarms automatically at teardown; a test that returns beat the
+    clock.  ``exit=True`` because a deadlocked process cannot run
+    teardown — a hard exit with stacks beats a silent CI timeout.
+    """
+    dump_path = os.environ.get("REPRO_FAULTHANDLER_DUMP")
+    dump_file = open(dump_path, "w") if dump_path else None
+
+    def arm(timeout_s: float) -> None:
+        if dump_file is not None:
+            faulthandler.dump_traceback_later(
+                timeout_s, exit=True, file=dump_file
+            )
+        else:
+            faulthandler.dump_traceback_later(timeout_s, exit=True)
+
+    try:
+        yield arm
+    finally:
+        faulthandler.cancel_dump_traceback_later()
+        if dump_file is not None:
+            dump_file.close()

@@ -1,0 +1,276 @@
+"""Property + example tests for EDF micro-batch formation.
+
+:func:`repro.serve.batching.form_batch` is pure — Hypothesis drives it
+directly (no engine, no clock, no threads) and asserts the scheduling
+invariants the serving engine relies on: EDF order, expiry shedding
+before dispatch, params homogeneity, input conservation, and the
+no-starvation fairness bound for deadline-less tickets.  The
+example-based tests in the same module run even without hypothesis
+installed (see ``_hypothesis_compat``).
+"""
+
+import itertools
+
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.serve.batching import (
+    BatchPlan,
+    effective_deadline,
+    form_batch,
+)
+
+HORIZON = 60.0
+
+
+class _Q:
+    """The duck-typed slice of ``queries`` that form_batch reads."""
+
+    def __init__(self, rows):
+        self.shape = (rows, 4)
+
+
+class Ticket:
+    _seq = itertools.count()
+
+    def __init__(self, rows=1, params="p", deadline=None,
+                 submitted_mono=0.0, seq=None):
+        self.queries = _Q(rows)
+        self.params = params
+        self.deadline = deadline
+        self.submitted_mono = submitted_mono
+        self.seq = next(self._seq) if seq is None else seq
+
+    def __repr__(self):
+        return (f"Ticket(rows={self.queries.shape[0]}, "
+                f"params={self.params!r}, deadline={self.deadline}, "
+                f"sub={self.submitted_mono}, seq={self.seq})")
+
+
+def tickets_strategy():
+    """Random queues: small rows, two params classes, mixed deadlines."""
+    one = st.builds(
+        Ticket,
+        rows=st.integers(min_value=1, max_value=8),
+        params=st.sampled_from(["a", "b"]),
+        deadline=st.one_of(
+            st.none(),
+            st.floats(min_value=-50.0, max_value=150.0,
+                      allow_nan=False, allow_infinity=False),
+        ),
+        submitted_mono=st.floats(min_value=0.0, max_value=100.0,
+                                 allow_nan=False, allow_infinity=False),
+    )
+    return st.lists(one, min_size=0, max_size=24)
+
+
+# -- properties (hypothesis) -------------------------------------------------
+
+
+@given(pending=tickets_strategy(),
+       max_rows=st.integers(min_value=1, max_value=16),
+       now=st.floats(min_value=0.0, max_value=120.0, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_partition_conservation(pending, max_rows, now):
+    """batch + expired + remaining is EXACTLY the input; no overlaps."""
+    plan = form_batch(pending, max_rows=max_rows, now=now,
+                      no_deadline_horizon=HORIZON)
+    taken = [id(t) for t in plan.batch] + [id(t) for t in plan.expired]
+    assert len(taken) == len(set(taken))  # disjoint
+    assert set(taken) <= {id(t) for t in pending}
+    remaining = [t for t in pending if id(t) not in set(taken)]
+    assert len(remaining) + len(taken) == len(pending)
+
+
+@given(pending=tickets_strategy(),
+       max_rows=st.integers(min_value=1, max_value=16),
+       now=st.floats(min_value=0.0, max_value=120.0, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_expired_shed_before_dispatch(pending, max_rows, now):
+    """``expired`` is exactly the past-deadline set; none are batched."""
+    plan = form_batch(pending, max_rows=max_rows, now=now,
+                      no_deadline_horizon=HORIZON)
+    want = {id(t) for t in pending
+            if t.deadline is not None and now > t.deadline}
+    assert {id(t) for t in plan.expired} == want
+    assert not ({id(t) for t in plan.batch} & want)
+
+
+@given(pending=tickets_strategy(),
+       max_rows=st.integers(min_value=1, max_value=16),
+       now=st.floats(min_value=0.0, max_value=120.0, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_params_homogeneous_and_edf_prefix(pending, max_rows, now):
+    """One batch = one params class, taken in EDF order within the class.
+
+    The batch must be precisely the row-capped prefix of the lead's
+    class in effective-deadline order (seq tie-break) — skipping a
+    nearer-deadline same-class ticket for a later one is an EDF
+    violation.
+    """
+    plan = form_batch(pending, max_rows=max_rows, now=now,
+                      no_deadline_horizon=HORIZON)
+    if not plan.batch:
+        return
+    lead = plan.batch[0]
+    assert all(t.params == lead.params for t in plan.batch)
+
+    def key(t):
+        return (effective_deadline(t, HORIZON), t.seq)
+
+    live = [t for t in pending
+            if not (t.deadline is not None and now > t.deadline)]
+    assert key(lead) == min(key(t) for t in live)  # global EDF lead
+    cls = sorted((t for t in live if t.params == lead.params), key=key)
+    expect, rows = [], 0
+    for t in cls:
+        r = t.queries.shape[0]
+        if expect and rows + r > max_rows:
+            break
+        expect.append(t)
+        rows += r
+    assert [id(t) for t in plan.batch] == [id(t) for t in expect]
+
+
+@given(pending=tickets_strategy(),
+       max_rows=st.integers(min_value=1, max_value=16),
+       now=st.floats(min_value=0.0, max_value=120.0, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_row_cap_with_lead_exemption(pending, max_rows, now):
+    """rows <= max_rows unless a single oversized lead dispatches alone."""
+    plan = form_batch(pending, max_rows=max_rows, now=now,
+                      no_deadline_horizon=HORIZON)
+    if plan.rows > max_rows:
+        assert len(plan.batch) == 1
+
+
+@given(n_rounds=st.integers(min_value=1, max_value=50),
+       urgency=st.floats(min_value=0.1, max_value=5.0, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_no_starvation_fairness_bound(n_rounds, urgency):
+    """A deadline-less ticket outlives any stream of urgent arrivals.
+
+    Simulation: one deadline-less ticket submitted at t=0 competes
+    against a fresh urgent ticket (relative deadline ``urgency``) every
+    second, ``max_rows=1`` so only one wins per round.  Its effective
+    deadline is the horizon, so once the urgent arrivals' deadlines pass
+    the horizon it MUST lead — it is served no later than
+    ``horizon + 1`` seconds after submission, the fairness bound.
+    """
+    horizon = 10.0
+    patient = Ticket(rows=1, params="p", deadline=None, submitted_mono=0.0)
+    queue = [patient]
+    served_at = None
+    for step in range(n_rounds):
+        now = float(step)
+        queue.append(Ticket(rows=1, params="p", deadline=now + urgency,
+                            submitted_mono=now))
+        plan = form_batch(queue, max_rows=1, now=now,
+                          no_deadline_horizon=horizon)
+        gone = {id(t) for t in plan.batch} | {id(t) for t in plan.expired}
+        if any(t is patient for t in plan.batch):
+            served_at = now
+            break
+        queue = [t for t in queue if id(t) not in gone]
+    if n_rounds > horizon + 1:
+        assert served_at is not None and served_at <= horizon + 1.0
+
+
+@given(subs=st.lists(
+    st.floats(min_value=0.0, max_value=9.0, allow_nan=False),
+    min_size=2, max_size=8,
+))
+@settings(max_examples=100, deadline=None)
+def test_deadline_ties_break_by_seq(subs):
+    """Equal effective deadlines dispatch in admission (seq) order."""
+    pending = [Ticket(rows=1, params="p", deadline=100.0, submitted_mono=s)
+               for s in subs]
+    plan = form_batch(pending, max_rows=len(pending), now=0.0,
+                      no_deadline_horizon=HORIZON)
+    seqs = [t.seq for t in plan.batch]
+    assert seqs == sorted(seqs)
+
+
+# -- examples (always run, no hypothesis needed) -----------------------------
+
+
+def test_edf_reorders_past_a_bulk_head():
+    """The FIFO failure mode: a long-deadline bulk scan at the queue head
+    no longer blocks a short-deadline interactive request behind it."""
+    bulk = Ticket(rows=4, params="p", deadline=500.0, submitted_mono=0.0)
+    urgent = Ticket(rows=1, params="p", deadline=1.0, submitted_mono=0.5)
+    plan = form_batch([bulk, urgent], max_rows=4, now=0.6)
+    assert plan.batch[0] is urgent
+    assert plan.expired == ()
+
+
+def test_different_params_class_waits_without_blocking():
+    """A different-params ticket between two same-class ones is skipped
+    (waits its turn), not allowed to end the batch early."""
+    a1 = Ticket(rows=1, params="a", deadline=1.0)
+    b = Ticket(rows=1, params="b", deadline=2.0)
+    a2 = Ticket(rows=1, params="a", deadline=3.0)
+    plan = form_batch([a1, b, a2], max_rows=8, now=0.0)
+    assert [t is x for t, x in zip(plan.batch, (a1, a2))] == [True, True]
+    assert len(plan.batch) == 2
+
+
+def test_expired_are_shed_not_batched():
+    dead = Ticket(rows=1, params="p", deadline=1.0)
+    live = Ticket(rows=1, params="p", deadline=9.0)
+    plan = form_batch([dead, live], max_rows=8, now=5.0)
+    assert plan.expired == (dead,)
+    assert plan.batch == (live,)
+
+
+def test_oversized_lead_dispatches_alone():
+    big = Ticket(rows=32, params="p", deadline=1.0)
+    small = Ticket(rows=1, params="p", deadline=2.0)
+    plan = form_batch([big, small], max_rows=8, now=0.0)
+    assert plan.batch == (big,)
+    assert plan.rows == 32
+
+
+def test_row_overflow_stops_within_class_preserving_edf():
+    """A same-class ticket that does not fit ENDS the batch — taking a
+    later-deadline smaller one instead would violate EDF order."""
+    t1 = Ticket(rows=4, params="p", deadline=1.0)
+    t2 = Ticket(rows=8, params="p", deadline=2.0)  # overflows
+    t3 = Ticket(rows=1, params="p", deadline=3.0)  # would fit, but later
+    plan = form_batch([t1, t2, t3], max_rows=8, now=0.0)
+    assert plan.batch == (t1,)
+
+
+def test_deadline_less_tickets_age_under_horizon():
+    old = Ticket(rows=1, params="p", deadline=None, submitted_mono=0.0)
+    fresh = Ticket(rows=1, params="p", deadline=70.0, submitted_mono=50.0)
+    # old's effective deadline is 0 + 60 < 70: it leads despite no deadline
+    plan = form_batch([fresh, old], max_rows=1, now=50.0,
+                      no_deadline_horizon=60.0)
+    assert plan.batch == (old,)
+
+
+def test_empty_and_all_expired_inputs():
+    assert form_batch([], max_rows=4, now=0.0) == BatchPlan((), ())
+    dead = Ticket(rows=1, params="p", deadline=1.0)
+    plan = form_batch([dead], max_rows=4, now=2.0)
+    assert plan.batch == () and plan.expired == (dead,)
+
+
+def test_max_rows_validation():
+    with pytest.raises(ValueError):
+        form_batch([], max_rows=0, now=0.0)
+
+
+def test_effective_deadline():
+    assert effective_deadline(Ticket(deadline=5.0)) == 5.0
+    assert effective_deadline(
+        Ticket(deadline=None, submitted_mono=2.0), 60.0
+    ) == 62.0
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_hypothesis_present_marker():
+    """CI's concurrency-stress job installs hypothesis; this canary fails
+    collection there if the property tests above silently skipped."""
+    assert HAVE_HYPOTHESIS
